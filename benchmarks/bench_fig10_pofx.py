@@ -1,0 +1,39 @@
+"""Fig. 10/11: PoFx converter cost vs (N-1, ES, M).
+
+FPGA metrics (CPD / LUTs / power) become: static op count of the vectorized
+converter (LUT/depth proxy), measured decode throughput, and — matching the
+paper's observation that cost is flat in M but grows with ES and N — the
+trends across the sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pofx import pofx_normalized
+
+from .common import jaxpr_ops, wall_time, write_csv
+
+
+def run():
+    rows = []
+    n_codes = 1 << 18
+    for N in (5, 6, 7, 8):
+        for ES in (0, 1, 2, 3):
+            codes = jnp.asarray(
+                np.random.default_rng(N * 10 + ES).integers(0, 1 << (N - 1),
+                                                            n_codes),
+                jnp.int32)
+            for M in (8, 16):
+                fn = lambda c: pofx_normalized(c, N, ES, M)[0]
+                rows.append({
+                    "N_minus_1": N - 1, "ES": ES, "M": M,
+                    "ops": jaxpr_ops(fn, codes),
+                    "ns_per_code": wall_time(fn, codes) / n_codes * 1e9,
+                })
+    write_csv("fig10_pofx", rows)
+    by = {(r["N_minus_1"], r["ES"], r["M"]): r for r in rows}
+    # paper trends: cost flat in M; grows with N and ES
+    flat_in_m = abs(by[(7, 2, 16)]["ops"] - by[(7, 2, 8)]["ops"]) <= 2
+    grows_with_n = by[(7, 2, 8)]["ops"] >= by[(4, 2, 8)]["ops"]
+    return rows, {"flat_in_M": flat_in_m, "grows_with_N": grows_with_n}

@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+the per-(arch x shape x mesh) table: three terms in seconds, the dominant
+bound, MFU upper bound, and MODEL_FLOPS/HLO_FLOPS.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import write_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh=None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run():
+    rows = []
+    ok = skipped = failed = 0
+    for rec in load_cells():
+        if rec.get("skipped"):
+            skipped += 1
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "quant": rec.get("quant"),
+                         "status": "skip:" + rec.get("reason", "")[:40]})
+            continue
+        if not rec.get("ok"):
+            failed += 1
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "quant": rec.get("quant"),
+                         "status": "FAIL"})
+            continue
+        ok += 1
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "quant": rec.get("quant"), "status": "ok",
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "bound": r["bound"],
+            "mfu_bound": round(r["mfu_bound"], 4),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "live_GiB_per_dev": round(
+                rec.get("memory", {}).get("live_bytes_per_device", 0) / 2**30,
+                2),
+            "compile_s": rec.get("compile_s"),
+        })
+    write_csv("roofline", rows)
+    return rows, {"cells_ok": ok, "cells_skipped": skipped,
+                  "cells_failed": failed}

@@ -1,0 +1,81 @@
+"""Tables 3/4: Pareto analysis of MAC/quantizer design points.
+
+Objectives (all minimized): avg weight quantization error, bits/weight
+(storage+communication), decode cost (op count — the PDP/LUT analogue).
+Reports front membership per category and the paper's headline: hypervolume
+gain from adding PoFx-based points over {Posit, FxP} alone.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fxp as fxp_mod
+from repro.core.pareto import hypervolume_gain, pareto_mask
+from repro.core.pofx import pofx_normalized
+from repro.core.posit import posit_decode
+from repro.core.quantizers import QuantSpec, quantize, storage_bits
+
+from .common import avg_abs_rel_error, jaxpr_ops, vgg_like_weights, write_csv
+
+
+def _points():
+    """Each point: (category, name, avg_err, bits/weight, MAC cost).
+
+    MAC-cost model follows the paper's Fig 14/15 structure: the posit-only
+    MAC decodes AND re-normalizes per operation (decode+encode datapath on
+    both operands), the PoFx MAC decodes the stored weight once per use and
+    then runs integer multiply-add, the FxP MAC is integer-only.
+    """
+    import dataclasses
+    w = vgg_like_weights(1 << 16)
+    codes = jnp.asarray(np.arange(1 << 12) % 16, jnp.int32)
+    int_mac = 2  # mul + add
+
+    def q(spec):
+        spec = dataclasses.replace(spec, scale_mode="tensor_pow2")
+        qt = quantize(jnp.asarray(w, jnp.float32), spec)
+        return (avg_abs_rel_error(w, np.asarray(qt.dequantize(jnp.float32))),
+                storage_bits(qt) / w.size)
+
+    pts = []
+    for M in (7, 8, 16):
+        err, bits = q(QuantSpec(kind="fxp", M=M, F=M - 1))
+        pts.append(("fxp", f"fxp{M}", err, bits, int_mac))
+    for N in (5, 6, 7, 8):
+        for ES in (0, 1, 2):
+            err, bits = q(QuantSpec(kind="posit", N=N, ES=ES))
+            dec = jaxpr_ops(lambda c, N=N, ES=ES: posit_decode(c, N, ES),
+                            codes)
+            # decode both operands + renormalize/encode the result (~decode)
+            pts.append(("posit", f"posit({N},{ES})", err, bits,
+                        3 * dec + int_mac))
+    for N in (6, 7, 8):
+        for ES in (1, 2):
+            err, bits = q(QuantSpec(kind="pofx", N=N, ES=ES, M=8))
+            dec = jaxpr_ops(lambda c, N=N, ES=ES:
+                            pofx_normalized(c, N, ES, 8)[0], codes)
+            pts.append(("pofx", f"pofx({N - 1},{ES})", err, bits,
+                        dec + int_mac))
+    return pts
+
+
+def run():
+    pts = _points()
+    obj = np.array([[p[2], p[3], p[4]] for p in pts])
+    mask = pareto_mask(obj)
+    rows = [{"category": p[0], "scheme": p[1], "avg_rel": p[2],
+             "bits_per_weight": p[3], "decode_ops": p[4],
+             "on_front": bool(m)} for p, m in zip(pts, mask)]
+    write_csv("table3_pareto", rows)
+    front_count = {}
+    for r in rows:
+        if r["on_front"]:
+            front_count[r["category"]] = front_count.get(r["category"], 0) + 1
+    base = obj[[i for i, p in enumerate(pts) if p[0] != "pofx"]]
+    extra = obj[[i for i, p in enumerate(pts) if p[0] == "pofx"]]
+    ref = obj.max(axis=0) * 1.1 + 1e-9
+    gain = hypervolume_gain(base, extra, ref)
+    return rows, {"front_counts": front_count,
+                  "hypervolume_gain_pct_from_pofx": gain,
+                  "claim_pofx_expands_front": gain > 0}

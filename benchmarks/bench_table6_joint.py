@@ -1,0 +1,70 @@
+"""Table 6: joint accuracy x hardware-cost view of the surviving configs.
+
+Combines bench_table5's accuracies with storage bits/weight and decode op
+counts (PDP/LUT analogues) for the feasible configurations, mirroring the
+paper's joint table; the §Claims row checks PoFx configs reach FxP8-class
+accuracy with fewer stored bits.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pofx import pofx_normalized
+from repro.core.posit import posit_decode
+from repro.core import fxp as fxp_mod
+from repro.core.quantizers import QuantSpec, quantize, storage_bits
+from repro.core.analysis import spec_name
+
+from .common import jaxpr_ops, vgg_like_weights, write_csv
+from . import bench_table5_accuracy as t5
+
+
+def run():
+    acc_rows, _ = t5.run()
+    acc = {r["config"]: r["accuracy"] for r in acc_rows}
+    w = vgg_like_weights(1 << 14)
+    codes = jnp.asarray(np.arange(4096) % 32, jnp.int32)
+    rows = []
+
+    def cost(spec):
+        import dataclasses
+        if spec.kind not in ("fp32", "bf16"):
+            spec = dataclasses.replace(spec, scale_mode="tensor_pow2")
+        qt = quantize(jnp.asarray(w, jnp.float32), spec)
+        bits = storage_bits(qt) / w.size
+        if spec.kind == "fxp":
+            ops = jaxpr_ops(lambda c: fxp_mod.fxp_dequantize(c, spec.F), codes)
+        elif spec.kind == "posit":
+            ops = jaxpr_ops(lambda c: posit_decode(c, spec.N, spec.ES), codes)
+        else:
+            ops = jaxpr_ops(lambda c: pofx_normalized(c, spec.N, spec.ES,
+                                                      spec.M)[0], codes)
+        return bits, ops
+
+    table = [QuantSpec(kind="fxp", M=16, F=15), QuantSpec(kind="fxp", M=8, F=7)]
+    for N in (7, 8):
+        for ES in (1, 2, 3):
+            table.append(QuantSpec(kind="posit", N=N, ES=ES))
+    for N in (6, 7, 8):
+        for ES in (1, 2):
+            table.append(QuantSpec(kind="pofx", N=N, ES=ES, M=8,
+                                   path="via_fxp"))
+    for spec in table:
+        name = spec_name(spec)
+        bits, ops = cost(spec)
+        rows.append({"config": name, "accuracy": acc.get(name, float("nan")),
+                     "bits_per_weight": bits, "decode_ops": ops})
+    write_csv("table6_joint", rows)
+    by = {r["config"]: r for r in rows}
+    pofx72 = by["pofx(7,2,via_fxp)"]
+    fxp8 = by["fxp8"]
+    return rows, {
+        "pofx72_bits": pofx72["bits_per_weight"],
+        "fxp8_bits": fxp8["bits_per_weight"],
+        "pofx72_acc": pofx72["accuracy"],
+        "fxp8_acc": fxp8["accuracy"],
+        "claim_pofx_matches_fxp8_acc_with_fewer_bits":
+            bool(pofx72["accuracy"] >= fxp8["accuracy"] - 0.01
+                 and pofx72["bits_per_weight"] < fxp8["bits_per_weight"]),
+    }

@@ -1,0 +1,55 @@
+"""Shared benchmark utilities: paper-like weight distributions, decode-cost
+probes, CSV writing."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def vgg_like_weights(n: int = 1 << 16, seed: int = 0) -> np.ndarray:
+    """Pre-trained-conv-like weight sample (paper Fig. 1: VGG16 Conv2_1 —
+    near-normal, heavy mass near 0, range about [-0.3, 0.3])."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0.0, 0.05, size=n)
+    return np.clip(w, -0.3, 0.3)
+
+
+def avg_abs_rel_error(w: np.ndarray, wq: np.ndarray, eps: float = 1e-8) -> float:
+    return float(np.mean(np.abs(wq - w) / np.maximum(np.abs(w), eps)))
+
+
+def wall_time(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def jaxpr_ops(fn, *args) -> int:
+    """Static op count of the jaxpr — the CPD/LUT-count analogue we can
+    measure without hardware (deeper decode == more primitive ops)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return sum(1 for _ in jaxpr.jaxpr.eqns)
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if not rows:
+        return path
+    keys = list(rows[0].keys())
+    with open(path, "w", newline="") as f:
+        wr = csv.DictWriter(f, fieldnames=keys)
+        wr.writeheader()
+        for r in rows:
+            wr.writerow(r)
+    return path

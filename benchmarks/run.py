@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table5,...]
+
+Each bench returns (rows, claims). Rows land in experiments/bench/*.csv;
+the claims dict is printed as ``bench,claim,value`` lines — EXPERIMENTS.md
+§Claims is generated from this output.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig1_quant_error", "benchmarks.bench_fig1_quant_error"),
+    ("fig2_tradeoff", "benchmarks.bench_fig2_tradeoff"),
+    ("table2_normposit", "benchmarks.bench_table2_normposit"),
+    ("fig10_pofx", "benchmarks.bench_fig10_pofx"),
+    ("table3_pareto", "benchmarks.bench_table3_pareto"),
+    ("table5_accuracy", "benchmarks.bench_table5_accuracy"),
+    ("table6_joint", "benchmarks.bench_table6_joint"),
+    ("fig20_accel", "benchmarks.bench_fig20_accel"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench name substrings")
+    args = ap.parse_args(argv)
+    only = [s for s in args.only.split(",") if s]
+    failures = []
+    for name, module in BENCHES:
+        if only and not any(s in name for s in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            rows, claims = mod.run()
+            dt = time.time() - t0
+            print(f"=== {name}: {len(rows)} rows in {dt:.1f}s")
+            for k, v in claims.items():
+                print(f"{name},{k},{v}")
+        except Exception:
+            failures.append(name)
+            print(f"=== {name}: FAILED")
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benches: {failures}")
+        return 1
+    print("all benches ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""The paper's Fig. 8 behavioral-analysis framework, end to end.
+
+Takes a (small, freshly trained) LM, runs the three-level quantization
+error pipeline over the full (FxP | Posit | PoFx) config grid, prunes
+infeasible configs level by level, and prints the survivors with their
+storage cost — the ExPAN(N)D design-space exploration front-end.
+
+    PYTHONPATH=src python examples/behavioral_analysis.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.analysis import default_spec_grid, spec_name, sweep_configs
+from repro.data import DataConfig, synthetic_batch
+from repro.launch.train import make_train_state, make_train_step
+from repro.nn.models import build_model, ce_loss, quantize_params
+
+
+def main():
+    cfg = smoke(ARCHS["yi-9b"])
+    rcfg = RunConfig(learning_rate=1e-3, total_steps=60, warmup_steps=6,
+                     remat="none")
+    model = build_model(cfg, rcfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model), donate_argnums=(0,))
+    for step in range(60):
+        batch = {k: jnp.asarray(v) for k, v in synthetic_batch(dc, step).items()}
+        state, metrics = step_fn(state, batch)
+    params = state["params"]
+    print(f"trained 60 steps; loss={float(metrics['loss']):.3f}")
+
+    # level a inputs: the attention/MLP weight matrices of layer 0
+    blocks = params["blocks"]
+    weights = {
+        "wq": jnp.asarray(blocks["attn"]["wq"][0].reshape(cfg.d_model, -1)),
+        "wo": jnp.asarray(blocks["attn"]["wo"][0]),
+        "wg": jnp.asarray(blocks["mlp"]["wg"][0]),
+        "unembed": jnp.asarray(params["unembed"]),
+    }
+    # level b: apply-fns per weight (the layer's matmul on a cached input)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    layer_apply = {k: ((lambda w, x: x @ w), x) for k in ("wq", "wg")}
+
+    # level c: end-to-end eval loss with the whole net quantized
+    eval_batch = synthetic_batch(dc, 9_999)
+
+    def end_to_end(spec):
+        qp = quantize_params(params, spec)
+        logits = model.forward(qp, jnp.asarray(eval_batch["tokens"]))
+        return -float(ce_loss(logits, jnp.asarray(eval_batch["labels"])))
+
+    report = sweep_configs(
+        weights, default_spec_grid(include_paths=True),
+        layer_apply=layer_apply, end_to_end=end_to_end,
+        prune_weight_err=0.25, prune_act_err=0.25)
+
+    print(f"\npruned at level a (weight err): {report.pruned_at_a}")
+    print(f"pruned at level b (activation err): {report.pruned_at_b}")
+    print(f"survivors: {len(report.survivors)}")
+    print("\n" + report.table())
+
+    # recommend: best accuracy per storage budget
+    best = {}
+    for name, rec in report.per_config.items():
+        if rec.get("pruned") or "metric" not in rec:
+            continue
+        b = round(rec["bits_per_weight"])
+        if b not in best or rec["metric"] > best[b][1]:
+            best[b] = (name, rec["metric"])
+    print("\nbest config per stored-bit budget:")
+    for b in sorted(best):
+        print(f"  {b:2d} bits/weight -> {best[b][0]:<22} "
+              f"eval_nll={-best[b][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

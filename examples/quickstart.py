@@ -1,0 +1,39 @@
+"""Quickstart: the paper's pipeline in 60 lines.
+
+1. take float weights,
+2. store them as (N-1)-bit normalized posit codes (ExPAN(N)D's format),
+3. run a matmul through the PoFx datapath (decode -> FxP -> MXU),
+4. compare against fp32 and against FxP8 storage.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import QuantSpec, quantize, storage_bits
+from repro.kernels.ops import quant_matmul
+
+rng = np.random.default_rng(0)
+w = jnp.asarray(rng.normal(0, 0.05, (512, 256)), jnp.float32)   # trained-ish
+x = jnp.asarray(rng.normal(0, 1.0, (8, 512)), jnp.float32)
+
+y_ref = x @ w
+
+print(f"{'format':<14} {'bits/w':>7} {'storage':>10} {'matmul rel err':>15}")
+for name, spec in [
+    ("fxp8", QuantSpec(kind="fxp", M=8, F=7)),
+    ("posit(8,2)", QuantSpec(kind="posit", N=8, ES=2)),
+    ("pofx(7,2)", QuantSpec(kind="pofx", N=8, ES=2, M=8)),   # the paper
+    ("pofx(5,2)", QuantSpec(kind="pofx", N=6, ES=2, M=8)),
+]:
+    qt = quantize(w, spec, axis=-1)
+    y = quant_matmul(x, qt, out_dtype=jnp.float32)
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    bits = storage_bits(qt) / w.size
+    print(f"{name:<14} {bits:7.2f} {storage_bits(qt)/8/1024:8.1f}KiB {rel:15.5f}")
+
+# the same QuantizedTensor flows through jit / scan / checkpointing:
+qt = quantize(w, QuantSpec(kind="pofx", N=8, ES=2, M=8), axis=-1)
+fast = jax.jit(lambda x, q: quant_matmul(x, q))
+print("jit ok:", fast(x, qt).shape, "codes dtype:", qt.codes.dtype)

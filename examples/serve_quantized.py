@@ -1,0 +1,19 @@
+"""Serving example: batched generation with PoFx-stored weights.
+
+Wraps repro.launch.serve: loads/initializes a model, quantizes the weights
+to the paper's normalized-posit format, prefills a batch of prompts and
+decodes greedily with a donated KV cache, reporting storage + throughput.
+
+    PYTHONPATH=src python examples/serve_quantized.py --arch moonshot-v1-16b-a3b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--quant", default="pofx8")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--quant", args.quant,
+                "--batch", "4", "--prompt-len", "48", "--gen", "16"])

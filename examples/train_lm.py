@@ -1,0 +1,106 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps, then
+deploy it with posit-compressed weights and measure the quality cost.
+
+Pipeline (all on whatever devices exist — CPU here, a pod in production):
+
+  synthetic data stream -> jit train step (remat, donated state, AdamW with
+  posit8 moments) -> async checkpoints -> post-training quantization
+  (normalized posit / PoFx) -> perplexity comparison fp32 vs pofx8 vs fxp8.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+(defaults to --steps 120 --small for a quick CPU run)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.quantizers import QuantSpec
+from repro.data import DataConfig, synthetic_batch
+from repro.launch.train import make_train_state, make_train_step
+from repro.nn.models import build_model, ce_loss, quantize_params
+from repro.runtime import CheckpointManager, StepTimeMonitor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--small", action="store_true", default=True)
+    ap.add_argument("--big", dest="small", action="store_false",
+                    help="~100M params (slower on CPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = smoke(ARCHS["yi-9b"])
+    if not args.small:
+        # ~100M params: 12L x d512 x ff2048, 8 heads, 32k vocab
+        base = dataclasses.replace(base, n_layers=12, d_model=512,
+                                   n_heads=8, n_kv_heads=4, d_head=64,
+                                   d_ff=2048, vocab_size=32000)
+    cfg = base
+    rcfg = RunConfig(learning_rate=1e-3, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1),
+                     remat="block", opt_state_quant="posit8")
+    model = build_model(cfg, rcfg)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(model.abstract_params()))
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
+          f"-> {n_params/1e6:.1f}M params")
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    manager = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if manager.latest_step() is not None:
+        state = manager.restore()
+        start = manager.latest_step() + 1
+        print(f"resumed from step {start - 1}")
+    step_fn = jax.jit(make_train_step(model), donate_argnums=(0,))
+    mon = StepTimeMonitor()
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in synthetic_batch(dc, step).items()}
+        mon.start()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        mon.stop()
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e}")
+        if step % 50 == 49:
+            manager.save(step, state)
+    manager.save(args.steps - 1, state)
+    manager.wait()
+    print(f"trained in {time.time()-t0:.1f}s | {mon.report()}")
+
+    # ---- deployment: post-training posit quantization ----------------------
+    params = state["params"]
+    eval_batches = [synthetic_batch(dc, 10_000 + i) for i in range(4)]
+
+    def ppl(p):
+        tot = 0.0
+        for b in eval_batches:
+            logits = model.forward(p, jnp.asarray(b["tokens"]))
+            tot += float(ce_loss(logits, jnp.asarray(b["labels"])))
+        return float(np.exp(tot / len(eval_batches)))
+
+    base_ppl = ppl(params)
+    print(f"\n{'format':<12} {'perplexity':>11} {'vs fp32':>9}")
+    print(f"{'fp32':<12} {base_ppl:11.3f} {'-':>9}")
+    for name, spec in [("pofx(7,2)", QuantSpec(kind="pofx", N=8, ES=2, M=8)),
+                       ("pofx(5,2)", QuantSpec(kind="pofx", N=6, ES=2, M=8)),
+                       ("fxp8", QuantSpec(kind="fxp", M=8, F=7))]:
+        qp = quantize_params(params, spec)
+        p = ppl(qp)
+        print(f"{name:<12} {p:11.3f} {p/base_ppl:8.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""FxP(M, F) — two's-complement linear fixed-point quantization.
+
+The paper's baseline scheme: M total bits, F fraction bits, value = code/2^F,
+codes clamped to [-2^(M-1), 2^(M-1)-1]. Round-to-nearest-even via rint.
+
+Also provides the *normalizer* scales used to bring LM weights into the
+normalized range the paper assumes for ANN parameters: per-tensor or
+per-channel max-|w| scaling, with a power-of-two option so the rescale is an
+exact exponent shift (hardware-friendly; keeps PoFx bit-exactness intact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "fxp_quantize",
+    "fxp_dequantize",
+    "fxp_quantize_np",
+    "fxp_dequantize_np",
+    "compute_scale",
+]
+
+
+def _q(x, M: int, F: int, xp):
+    lo = -(1 << (M - 1))
+    hi = (1 << (M - 1)) - 1
+    if xp is np:
+        scaled = np.rint(np.asarray(x, dtype=np.float64) * float(1 << F))
+    else:
+        scaled = jnp.round(jnp.asarray(x, dtype=jnp.float32) * float(1 << F))
+    return xp.clip(scaled, lo, hi).astype(xp.int32)
+
+
+def fxp_quantize(x, M: int, F: int) -> jax.Array:
+    return _q(x, M, F, jnp)
+
+
+def fxp_quantize_np(x, M: int, F: int) -> np.ndarray:
+    return _q(x, M, F, np)
+
+
+def fxp_dequantize(codes, F: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.asarray(codes).astype(dtype) * (1.0 / (1 << F))
+
+
+def fxp_dequantize_np(codes, F: int) -> np.ndarray:
+    return np.asarray(codes, dtype=np.float64) / float(1 << F)
+
+
+def compute_scale(w, mode: str = "tensor_pow2", axis: int | None = None, eps: float = 1e-12):
+    """Normalizer scale so that w/scale is within [-1, 1].
+
+    mode: "none" (scale 1 — paper's assumption of already-normalized params),
+          "tensor" | "tensor_pow2" | "channel" | "channel_pow2".
+    ``axis`` is the *output-channel* axis kept distinct for channel modes.
+    Returns an array broadcastable against w.
+    """
+    xp = jnp if isinstance(w, jax.Array) else np
+    if mode == "none":
+        return xp.ones((1,) * xp.asarray(w).ndim, dtype=xp.float32)
+    a = xp.abs(xp.asarray(w))
+    if mode.startswith("tensor"):
+        s = xp.max(a)
+        s = xp.maximum(s, eps)
+        s = xp.reshape(s, (1,) * a.ndim)
+    elif mode.startswith("channel"):
+        if axis is None:
+            raise ValueError("channel scale mode requires axis")
+        red = tuple(i for i in range(a.ndim) if i != axis % a.ndim)
+        s = xp.maximum(xp.max(a, axis=red, keepdims=True), eps)
+    else:
+        raise ValueError(f"unknown scale mode {mode!r}")
+    if mode.endswith("pow2"):
+        s = xp.exp2(xp.ceil(xp.log2(s)))
+    return s.astype(xp.float32)

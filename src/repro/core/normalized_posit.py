@@ -1,0 +1,119 @@
+"""Normalized Posit — the ExPAN(N)D (N-1)-bit storage representation.
+
+Paper §4.1.1 / Table 2: an N-bit Posit pattern representing a *normalized*
+number (|value| <= 1; positive sub-unit values lead with ``00``, negative
+with ``11``) always has its two leading bits identical.  ExPAN(N)D drops the
+duplicated bit and stores N-1 bits; decode replicates the MSB.
+
+Code layout of a stored normalized posit ``b_{N-2} ... b_0``:
+  expand -> posit = [b_{N-2}, b_{N-2}, b_{N-3}, ..., b_0]   (N bits)
+
+Monotonicity note: posit codes order like two's-complement integers, so
+clamping a signed code into [-(2^(N-2)), 2^(N-2)-1] saturates exactly onto the
+normalized sub-lattice ([-1, largest-posit-below-1]).
+
+Also provides true k-bit packing (``pack_bits``/``unpack_bits``) used for
+checkpoint storage, DCN transfer accounting and the paper's storage claims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .posit import posit_decode, posit_decode_np, posit_encode, posit_encode_np
+
+__all__ = [
+    "norm_expand",
+    "norm_compress",
+    "norm_encode",
+    "norm_encode_np",
+    "norm_decode",
+    "norm_decode_np",
+    "norm_max",
+    "pack_bits",
+    "unpack_bits",
+]
+
+
+def norm_expand(codes, N: int):
+    """(N-1)-bit normalized code -> N-bit posit code (replicate MSB)."""
+    xp = jnp if isinstance(codes, jax.Array) else np
+    c = xp.asarray(codes).astype(xp.int32) & ((1 << (N - 1)) - 1)
+    s = (c >> (N - 2)) & 1
+    lower = c & ((1 << (N - 2)) - 1)
+    return (s << (N - 1)) | (s << (N - 2)) | lower
+
+
+def norm_compress(codes, N: int):
+    """N-bit posit code -> (N-1)-bit normalized code (drop duplicated bit).
+
+    Callers must ensure codes lie in the normalized sub-lattice (leading two
+    bits equal); ``norm_encode`` guarantees this via signed-code clamping.
+    """
+    xp = jnp if isinstance(codes, jax.Array) else np
+    c = xp.asarray(codes).astype(xp.int32) & ((1 << N) - 1)
+    s = (c >> (N - 1)) & 1
+    lower = c & ((1 << (N - 2)) - 1)
+    return (s << (N - 2)) | lower
+
+
+def _signed_clamp(codes, N: int, xp):
+    """Clamp raw N-bit posit codes (as signed ints) onto the normalized range."""
+    c = xp.asarray(codes).astype(xp.int32) & ((1 << N) - 1)
+    signed = xp.where(c >= (1 << (N - 1)), c - (1 << N), c)
+    lo = -(1 << (N - 2))          # code of -1.0
+    hi = (1 << (N - 2)) - 1       # largest posit < 1.0
+    signed = xp.clip(signed, lo, hi)
+    return signed & ((1 << N) - 1)
+
+
+def norm_encode_np(x, N: int, ES: int) -> np.ndarray:
+    full = posit_encode_np(x, N, ES)
+    return norm_compress(_signed_clamp(full, N, np), N)
+
+
+def norm_encode(x, N: int, ES: int) -> jax.Array:
+    full = posit_encode(x, N, ES)
+    return norm_compress(_signed_clamp(full, N, jnp), N)
+
+
+def norm_encode_arith(x, N: int, ES: int) -> jax.Array:
+    """Gather-free normalized-posit encode (bit-arithmetic RNE; see
+    posit_encode_arith). Partition-safe inside shard_map manual axes."""
+    from .posit import posit_encode_arith
+    full = posit_encode_arith(x, N, ES)
+    return norm_compress(_signed_clamp(full, N, jnp), N)
+
+
+def norm_decode_np(codes, N: int, ES: int) -> np.ndarray:
+    return posit_decode_np(norm_expand(codes, N), N, ES)
+
+
+def norm_decode(codes, N: int, ES: int) -> jax.Array:
+    return posit_decode(norm_expand(codes, N), N, ES)
+
+
+def norm_max(N: int, ES: int) -> float:
+    """Largest representable normalized-posit magnitude (< 1)."""
+    return float(norm_decode_np(np.asarray([(1 << (N - 2)) - 1]), N, ES)[0])
+
+
+# ---------------------------------------------------------------------------
+# True k-bit packing (numpy; storage-side only — kernels read byte-aligned
+# codes, checkpoints/DCN use packed streams).
+# ---------------------------------------------------------------------------
+
+def pack_bits(codes: np.ndarray, k: int) -> np.ndarray:
+    """Pack int codes (< 2^k) into a uint8 byte stream, MSB-first."""
+    flat = np.asarray(codes).astype(np.uint32).reshape(-1)
+    bits = ((flat[:, None] >> np.arange(k - 1, -1, -1, dtype=np.uint32)) & 1).astype(np.uint8)
+    return np.packbits(bits.reshape(-1))
+
+
+def unpack_bits(packed: np.ndarray, k: int, count: int) -> np.ndarray:
+    """Inverse of pack_bits: recover ``count`` k-bit codes."""
+    bits = np.unpackbits(np.asarray(packed, dtype=np.uint8))[: count * k]
+    bits = bits.reshape(count, k).astype(np.uint32)
+    weights = (1 << np.arange(k - 1, -1, -1, dtype=np.uint32))
+    return (bits * weights).sum(axis=1).astype(np.int32)

@@ -1,0 +1,141 @@
+"""PoFx — the ExPAN(N)D Posit -> fixed-point converter (Algorithm 1).
+
+Bit-faithful, vectorized port of the paper's five-stage converter:
+
+  A1  sign extraction, implicit magnitude bit at position F
+  A2  conditional two's complement of the body
+  A3  modified leading-zero detector (invert-if-leading-zero + AND chain)
+  B1  regime evaluation: V = popcount(LZD), k = -V or V-1
+  B2  exponent/fraction extraction (the "silhouette" barrel extractor is
+      realized as a left-align + fixed split — bit-identical result)
+  C   SHIFT = 2^ES * k + e
+  D   barrel shift of the magnitude (right shifts TRUNCATE, exactly like the
+      RTL shifter; optional round-to-nearest provided as a beyond-paper knob)
+  E   sign-magnitude -> two's complement
+
+Output is FxP(M, F): an M-bit two's-complement integer whose value is
+``code / 2^F``.  Saturation to +/-(2^(M-1)-1) raises the overflow semantics
+the paper assigns to the OF flag (returned alongside).
+
+The *normalized* variant (paper §4.1.2) takes (N-1)-bit normalized codes,
+replicates the leading bit (Stage A), and — because every magnitude is < 1 —
+only ever shifts right.  ``-1`` is not extractable in sign-magnitude FxP(M,
+F=M-1); like the paper we flag OF and saturate to -(1 - 2^-F).
+
+``pofx_lut`` builds the full decode table with the bit-level algorithm; the
+Pallas kernels and jit paths may use either (tested equal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .normalized_posit import norm_expand
+from .posit import NAR, _decode_fields
+
+__all__ = [
+    "pofx_convert",
+    "pofx_convert_np",
+    "pofx_normalized",
+    "pofx_normalized_np",
+    "pofx_lut",
+    "pofx_norm_lut",
+]
+
+
+def _shift_trunc(mag, shift, xp, left_clamp: int, wide):
+    """Barrel shift with truncating right-shift (Stage D semantics).
+
+    Left shifts are clamped to ``left_clamp``: the magnitude field holds
+    <= N bits, so the product never wraps the wide integer type, while any
+    clamped shift still exceeds every supported M-bit output range and
+    saturates downstream — clamping preserves the OF semantics exactly.
+    """
+    left = xp.clip(shift, 0, left_clamp)
+    right = xp.clip(-shift, 0, 62 if wide == xp.int64 else 31)
+    w = mag.astype(wide)
+    return xp.where(shift >= 0, w << left, w >> right)
+
+
+def _pofx_impl(codes, N: int, ES: int, M: int, F: int, xp, rounding: str):
+    c = xp.asarray(codes).astype(xp.int32) & ((1 << N) - 1)
+    # jnp runs int32 (x64 disabled by default); numpy golden uses int64.
+    if xp is np:
+        wide, left_clamp = np.int64, 45
+    else:
+        wide, left_clamp = xp.int32, 31 - N
+        if M > 31:
+            raise ValueError("jnp PoFx supports M <= 31 (int32 datapath)")
+    # Stages A1-A3 + B1-B2 share the decode datapath (sign, regime k,
+    # exponent e, fraction left-aligned in an (N-1)-bit window).
+    s, k, e, frac = _decode_fields(c, N, ES, xp)
+    # A1: implicit leading one. MAG_ext is a fixed-point magnitude with
+    # (N-1) fraction bits: 1.f * 2^(N-1).
+    mag_ext = (1 << (N - 1)) | frac
+    # C: SHIFT = 2^ES * k + e, retargeted to F output fraction bits.
+    shift = (k << ES) + e + (F - (N - 1))
+    if rounding == "nearest":
+        # Beyond-paper knob: add half-ulp before a truncating right shift.
+        right = xp.where(shift < 0, -shift, 0)
+        rc = xp.clip(right, 0, 62 if wide == np.int64 else 31)
+        half = xp.where(right > 0, (1 << xp.clip(rc - 1, 0, 30)).astype(wide), 0)
+        mag = _shift_trunc(mag_ext, shift, xp, left_clamp, wide)
+        mag_r = (mag_ext.astype(wide) + half) >> rc
+        mag = xp.where(shift < 0, mag_r, mag)
+    else:
+        mag = _shift_trunc(mag_ext, shift, xp, left_clamp, wide)
+    # D: saturate to the M-bit sign-magnitude range; OF per paper.
+    max_mag = (1 << (M - 1)) - 1
+    of = mag > max_mag
+    mag = xp.clip(mag, 0, max_mag).astype(xp.int32)
+    # E: sign-magnitude -> two's complement.
+    out = xp.where(s == 1, -mag, mag).astype(xp.int32)
+    out = xp.where(c == 0, 0, out)
+    nar = c == NAR(N)
+    out = xp.where(nar, 0, out)
+    return out, (of & ~(c == 0) & ~nar)
+
+
+def pofx_convert_np(codes, N: int, ES: int, M: int, F: int, rounding: str = "trunc"):
+    """Golden numpy Algorithm-1 conversion. Returns (fxp_codes, of_flags)."""
+    return _pofx_impl(np.asarray(codes), N, ES, M, F, np, rounding)
+
+
+def pofx_convert(codes, N: int, ES: int, M: int, F: int, rounding: str = "trunc"):
+    """jnp Algorithm-1 conversion (jit friendly). Returns (fxp_codes, of)."""
+    return _pofx_impl(jnp.asarray(codes), N, ES, M, F, jnp, rounding)
+
+
+def _norm_impl(codes_nm1, N: int, ES: int, M: int, xp, rounding: str):
+    # Stage A of the normalized variant: replicate the stored leading bit.
+    full = norm_expand(codes_nm1, N)
+    # F = M-1: all output bits but the sign carry fraction (paper §4.1.2).
+    out, of = _pofx_impl(full, N, ES, M, M - 1, xp, rounding)
+    return out, of
+
+
+def pofx_normalized_np(codes_nm1, N: int, ES: int, M: int, rounding: str = "trunc"):
+    return _norm_impl(np.asarray(codes_nm1), N, ES, M, np, rounding)
+
+
+def pofx_normalized(codes_nm1, N: int, ES: int, M: int, rounding: str = "trunc"):
+    return _norm_impl(jnp.asarray(codes_nm1), N, ES, M, jnp, rounding)
+
+
+@functools.lru_cache(maxsize=64)
+def pofx_lut(N: int, ES: int, M: int, F: int, rounding: str = "trunc") -> np.ndarray:
+    """Full 2^N-entry Posit->FxP decode table (bit-level algorithm)."""
+    codes = np.arange(1 << N, dtype=np.int32)
+    out, _ = pofx_convert_np(codes, N, ES, M, F, rounding)
+    return out.astype(np.int32)
+
+
+@functools.lru_cache(maxsize=64)
+def pofx_norm_lut(N: int, ES: int, M: int, rounding: str = "trunc") -> np.ndarray:
+    """2^(N-1)-entry normalized-posit -> FxP(M, M-1) decode table."""
+    codes = np.arange(1 << (N - 1), dtype=np.int32)
+    out, _ = pofx_normalized_np(codes, N, ES, M, rounding)
+    return out.astype(np.int32)

@@ -1,0 +1,172 @@
+"""Quantizer registry — ExPAN(N)D storage/compute formats as a pytree type.
+
+A ``QuantSpec`` names one point of the paper's design space:
+
+  kind = "fp32" | "bf16"        passthrough baselines
+       | "fxp"                  FxP(M, F) linear quantization (paper baseline)
+       | "posit"                Posit(N, ES) storage, full-precision compute
+                                (the Posit-only comparator of Table 5)
+       | "pofx"                 **the paper's format**: normalized Posit(N-1,
+                                ES) storage, FxP(M, F=M-1) compute after PoFx
+
+  path (pofx only) = "direct"   FP32 -> Posit   -> FxP   (Table 5 "Posit_FxP")
+                   | "via_fxp"  FP32 -> FxP -> Posit -> FxP ("FxP_Posit_FxP")
+
+  scale_mode: normalizer bringing weights into [-1, 1] (see core.fxp);
+  "none" reproduces the paper's already-normalized assumption.
+
+``QuantizedTensor`` is a registered pytree (codes + scale are leaves, spec is
+static) so quantized params flow through jit/pjit/scan and checkpointing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fxp as _fxp
+from . import normalized_posit as _np_
+from . import posit as _posit
+from .pofx import pofx_norm_lut
+
+__all__ = ["QuantSpec", "QuantizedTensor", "quantize", "dequantize", "storage_bits"]
+
+_KINDS = ("fp32", "bf16", "fxp", "posit", "pofx")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    kind: str = "bf16"
+    N: int = 8            # posit total bit length (stored bits = N-1 for pofx)
+    ES: int = 2
+    M: int = 8            # FxP total bits
+    F: int = 7            # FxP fraction bits (pofx forces F = M-1)
+    path: str = "via_fxp"  # pofx quantization path
+    scale_mode: str = "channel_pow2"
+    rounding: str = "trunc"
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown quant kind {self.kind!r}")
+
+    @property
+    def stored_bits(self) -> int:
+        """Bits per stored weight (the paper's storage accounting)."""
+        if self.kind == "fp32":
+            return 32
+        if self.kind == "bf16":
+            return 16
+        if self.kind == "fxp":
+            return self.M
+        if self.kind == "posit":
+            return self.N
+        return self.N - 1  # pofx: normalized posit stores N-1 bits
+
+    def code_dtype(self):
+        b = self.stored_bits
+        if b <= 8:
+            return jnp.uint8
+        if b <= 15:
+            return jnp.int16
+        return jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    codes: jax.Array          # packed per-weight codes (or raw floats)
+    scale: jax.Array          # normalizer, broadcastable against codes
+    spec: QuantSpec
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(children[0], children[1], spec)
+
+    def dequantize(self, dtype=jnp.bfloat16):
+        return dequantize(self, dtype)
+
+
+def _as_f32(x):
+    return jnp.asarray(x, dtype=jnp.float32)
+
+
+def quantize(w, spec: QuantSpec, axis: Optional[int] = None) -> QuantizedTensor:
+    """Quantize a float array into the storage format named by ``spec``."""
+    w = _as_f32(w)
+    if spec.kind in ("fp32", "bf16"):
+        dt = jnp.float32 if spec.kind == "fp32" else jnp.bfloat16
+        one = jnp.ones((1,) * max(w.ndim, 1), jnp.float32)
+        return QuantizedTensor(w.astype(dt), one, spec)
+    if axis is None and spec.scale_mode.startswith("channel"):
+        axis = -1  # convention: last axis is the output-channel axis
+    scale = _fxp.compute_scale(w, spec.scale_mode, axis)
+    wn = w / scale
+    if spec.kind == "fxp":
+        codes = _fxp.fxp_quantize(wn, spec.M, spec.F)
+        dt = jnp.int8 if spec.M <= 8 else jnp.int32
+        return QuantizedTensor(codes.astype(dt), scale, spec)
+    if spec.kind == "posit":
+        codes = _posit.posit_encode(wn, spec.N, spec.ES)
+        return QuantizedTensor(codes.astype(spec.code_dtype()), scale, spec)
+    # pofx: optionally pre-round through the FxP grid (Table 5's good path),
+    # then encode onto the normalized posit lattice.
+    if spec.path == "via_fxp":
+        wn = _fxp.fxp_dequantize(_fxp.fxp_quantize(wn, spec.M, spec.M - 1), spec.M - 1)
+    codes = _np_.norm_encode(wn, spec.N, spec.ES)
+    return QuantizedTensor(codes.astype(spec.code_dtype()), scale, spec)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    """Recover float values as the *hardware* would see them.
+
+    pofx goes through the bit-level PoFx table: stored posit -> FxP(M, M-1)
+    two's-complement -> value * scale.  This is the datapath of Fig. 7.
+    """
+    spec = qt.spec
+    if spec.kind in ("fp32", "bf16"):
+        return qt.codes.astype(dtype)
+    if spec.kind == "fxp":
+        v = _fxp.fxp_dequantize(qt.codes, spec.F)
+    elif spec.kind == "posit":
+        v = _posit.posit_decode(qt.codes, spec.N, spec.ES)
+    else:  # pofx
+        lut = jnp.asarray(pofx_norm_lut(spec.N, spec.ES, spec.M, spec.rounding))
+        fxp_codes = jnp.take(lut, qt.codes.astype(jnp.int32), axis=0)
+        v = _fxp.fxp_dequantize(fxp_codes, spec.M - 1)
+    return (v * qt.scale).astype(dtype)
+
+
+def fxp_view(qt: QuantizedTensor):
+    """(int8 codes, float rescale) pair for the int8 MXU MAC path."""
+    spec = qt.spec
+    if spec.kind == "fxp":
+        return qt.codes.astype(jnp.int8), qt.scale * (1.0 / (1 << spec.F))
+    if spec.kind == "pofx":
+        lut = jnp.asarray(pofx_norm_lut(spec.N, spec.ES, spec.M, spec.rounding), jnp.int32)
+        codes = jnp.take(lut, qt.codes.astype(jnp.int32), axis=0).astype(jnp.int8)
+        return codes, qt.scale * (1.0 / (1 << (spec.M - 1)))
+    raise ValueError(f"no FxP view for kind {spec.kind!r}")
+
+
+def storage_bits(qt: QuantizedTensor) -> int:
+    """Total stored parameter bits (codes bit-packed + fp32 scales)."""
+    n = int(np.prod(qt.codes.shape)) if qt.codes.ndim else 1
+    scale_n = int(np.prod(qt.scale.shape)) if qt.scale.ndim else 1
+    if qt.spec.kind in ("fp32", "bf16"):
+        return n * qt.spec.stored_bits
+    return n * qt.spec.stored_bits + scale_n * 32

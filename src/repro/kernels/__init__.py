@@ -1,0 +1,8 @@
+"""repro.kernels — Pallas TPU kernels for the PoFx hot path.
+
+pofx_decode: VPU bit-parallel Algorithm-1 decode (posit codes -> FxP int8)
+pofx_matmul: fused Move&Store kernel (decode in VMEM -> MXU matmul)
+fxp_matmul:  int8 x int8 -> int32 MAC (the paper's FxP baseline)
+ref:         pure-jnp oracles; every kernel is allclose-tested against them.
+"""
+from .ops import fxp_matmul, pofx_decode, pofx_matmul, quant_matmul  # noqa: F401

@@ -1,0 +1,53 @@
+"""Public jit'd entry points for the kernels, with automatic dispatch.
+
+``quant_matmul`` is what the model layers call: given activations and a
+QuantizedTensor weight it picks the right datapath —
+
+  pofx   + use_kernel   -> fused Pallas decode+matmul (Move & Store)
+  pofx   + no kernel    -> LUT dequantize + XLA matmul (Move; decode at load)
+  fxp    + int8 acts    -> int8 MXU MAC (fxp_matmul)
+  others                -> dequantize + XLA matmul
+
+On this CPU container kernels run in interpret mode; on TPU they compile to
+Mosaic. ``use_kernel="auto"`` keeps kernels out of huge jit graphs (the
+dry-run lowers the XLA path; kernels are validated separately).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import QuantizedTensor, dequantize, fxp_view
+from .fxp_matmul import fxp_matmul
+from .pofx_decode import pofx_decode
+from .pofx_matmul import pofx_matmul
+
+__all__ = ["quant_matmul", "pofx_decode", "pofx_matmul", "fxp_matmul"]
+
+
+def quant_matmul(x: jax.Array, w: QuantizedTensor, *,
+                 use_kernel: bool = False,
+                 out_dtype=None) -> jax.Array:
+    """x @ dequant(w); x: (..., k), w codes: (k, n)."""
+    out_dtype = out_dtype or x.dtype
+    spec = w.spec
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if spec.kind == "pofx" and use_kernel:
+        scale = jnp.broadcast_to(w.scale, (1, w.codes.shape[-1])).reshape(-1)
+        y = pofx_matmul(x2, w.codes, scale, spec.N, spec.ES, spec.M)
+        return y.reshape(*lead, -1).astype(out_dtype)
+    if spec.kind == "fxp" and use_kernel:
+        codes, rescale = fxp_view(w)
+        # int8 activations: per-tensor symmetric quantization of x.
+        xmax = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-6)
+        xq = jnp.clip(jnp.round(x2 / xmax * 127.0), -127, 127).astype(jnp.int8)
+        acc = fxp_matmul(xq, codes)
+        y = acc.astype(jnp.float32) * (xmax / 127.0) * jnp.reshape(rescale, (1, -1))
+        return y.reshape(*lead, -1).astype(out_dtype)
+    wv = dequantize(w, jnp.bfloat16 if out_dtype == jnp.bfloat16 else jnp.float32)
+    y = jnp.dot(x2.astype(wv.dtype), wv, preferred_element_type=jnp.float32)
+    return y.reshape(*lead, -1).astype(out_dtype)

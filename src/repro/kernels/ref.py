@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel in this package must match its oracle bit-exactly (integer
+decode paths) or to float tolerance (accumulating matmuls) across the shape/
+dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pofx import pofx_normalized
+
+__all__ = ["pofx_decode_ref", "pofx_matmul_ref", "fxp_matmul_ref", "decode_norm_to_fxp"]
+
+
+def decode_norm_to_fxp(codes, N: int, ES: int, M: int):
+    """Normalized posit codes -> FxP(M, M-1) two's-complement int32.
+
+    This is the elementwise function both the oracle and the kernels share:
+    bit-level Algorithm 1 (stages A-E), jnp ops only, Pallas-safe.
+    """
+    out, _ = pofx_normalized(codes, N, ES, M)
+    return out
+
+
+def pofx_decode_ref(codes, N: int, ES: int, M: int = 8) -> jax.Array:
+    """Oracle for the decode kernel: uint8 codes -> int8 FxP codes."""
+    return decode_norm_to_fxp(codes.astype(jnp.int32), N, ES, M).astype(jnp.int8)
+
+
+def pofx_matmul_ref(x, codes, scale, N: int, ES: int, M: int = 8) -> jax.Array:
+    """Oracle for the fused Move&Store kernel.
+
+    x: (m, k) float; codes: (k, n) normalized posit; scale: (1, n) or (n,)
+    per-output-channel normalizer. Result fp32: x @ (decode(codes)/2^(M-1)) * scale.
+    """
+    fxp = decode_norm_to_fxp(codes.astype(jnp.int32), N, ES, M)
+    w = fxp.astype(jnp.float32) * (1.0 / (1 << (M - 1)))
+    y = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return y * jnp.reshape(scale, (1, -1)).astype(jnp.float32)
+
+
+def fxp_matmul_ref(a, b) -> jax.Array:
+    """Oracle for the FxP MAC kernel: int8 x int8 -> int32 accumulate.
+
+    The int32 accumulator is the TPU analogue of the paper's 3M-bit adder
+    (M=8 -> 24 bits of headroom needed; int32 provides 32).
+    """
+    return jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)

@@ -1,0 +1,149 @@
+"""Compiled-HLO analysis: collective bytes-on-wire + roofline terms.
+
+``parse_collectives`` scans post-SPMD HLO text for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, reads the
+result shapes and replica-group sizes, and converts each to **bytes on the
+wire per device** with ring-algorithm accounting:
+
+    all-gather          out_bytes * (g-1)/g
+    all-reduce          2 * bytes * (g-1)/g     (reduce-scatter + all-gather)
+    reduce-scatter      out_bytes * (g-1)        (input = out * g)
+    all-to-all          tuple_bytes * (g-1)/g
+    collective-permute  bytes                    (one send/recv)
+
+Collectives inside scan bodies appear once in the HLO but execute
+trip-count times. XLA's cost analysis accounts for this in FLOPs; for the
+wire bytes we multiply by the enclosing scan lengths, which the caller
+supplies as ``trip_counts`` = [len(outer scan), len(inner scan), ...] and we
+locate by counting ``/while/body`` frames in the op metadata. This is the
+pinned methodology for EXPERIMENTS.md §Roofline.
+
+Roofline constants (TPU v5e class, per chip):
+    197 TFLOP/s bf16 | 819 GB/s HBM | ~50 GB/s/link ICI
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+__all__ = ["parse_collectives", "CollectiveStats", "roofline_terms",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+_WHILE_RE = re.compile(r"/while/body")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: List[Dict]                      # per-op records
+    wire_bytes_per_device: float         # trip-count adjusted
+    by_kind: Dict[str, float]
+
+    def summary(self) -> str:
+        rows = [f"  {k:20s} {v/1e6:12.2f} MB/device"
+                for k, v in sorted(self.by_kind.items())]
+        rows.append(f"  {'TOTAL':20s} {self.wire_bytes_per_device/1e6:12.2f}"
+                    " MB/device")
+        return "\n".join(rows)
+
+
+def parse_collectives(hlo_text: str,
+                      trip_counts: Optional[List[int]] = None
+                      ) -> CollectiveStats:
+    trip_counts = trip_counts or []
+    ops = []
+    by_kind: Dict[str, float] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        bytes_ = _shape_bytes(m.group("result"))
+        gb = _GROUPS_BRACKET_RE.search(line)
+        if gb:
+            g = int(gb.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            g = len(gl.group(1).split(",")) if gl else 2
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = bytes_ * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2 * bytes_ * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = bytes_ * (g - 1)
+        elif kind == "all-to-all":
+            wire = bytes_ * (g - 1) / g
+        else:  # collective-permute
+            wire = bytes_
+        depth = len(_WHILE_RE.findall(line))
+        mult = 1
+        for i in range(min(depth, len(trip_counts))):
+            mult *= trip_counts[i]
+        if depth > len(trip_counts) and trip_counts:
+            mult *= trip_counts[-1]
+        wire *= mult
+        ops.append({"kind": kind, "bytes": bytes_, "group": g,
+                    "depth": depth, "mult": mult, "wire": wire})
+        by_kind[kind] = by_kind.get(kind, 0.0) + wire
+        total += wire
+    return CollectiveStats(ops, total, by_kind)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float,
+                   model_flops_global: float, n_devices: int) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds, plus derived ratios."""
+    t_compute = flops_per_device / PEAK_FLOPS_BF16
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = wire_bytes_per_device / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bound = max(terms, key=terms.get)
+    t_bound = terms[bound]
+    model_t = model_flops_global / (n_devices * PEAK_FLOPS_BF16)
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+        "bound": bound,
+        "step_lower_bound_s": t_bound,
+        # fraction of peak compute achievable at the roofline bound
+        "mfu_bound": (model_t / t_bound) if t_bound > 0 else float("nan"),
+        "useful_flops_ratio": (model_flops_global
+                               / (flops_per_device * n_devices)
+                               if flops_per_device else float("nan")),
+    }

@@ -1,0 +1,322 @@
+"""Trip-count-aware cost model over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation exactly once —
+a ``jax.lax.scan`` of 126 layers reports the FLOPs of *one* layer (verified
+empirically; see EXPERIMENTS.md §Roofline methodology). For a roofline that
+is useless, so this module re-derives the three terms from the HLO text
+with exact loop accounting:
+
+  1. split the module into computations; classify each by how it is
+     referenced (entry / while body / while cond / fusion ``calls=`` /
+     ``to_apply`` helper / conditional branch),
+  2. read every while loop's trip count out of its condition computation
+     (the ``constant(N)`` compared against the induction variable),
+  3. propagate multipliers down the call tree (a dot inside a fusion inside
+     a layer-scan inside a microbatch-scan gets n_layers x n_micro),
+  4. cost model per op:
+       flops:  dot = 2 * result_elems * prod(contracting dims)
+       bytes:  top-level ops in entry/while bodies: operands + result,
+               with in-place semantics for dynamic-update-slice (2x update
+               slice) and gather/dynamic-slice (2x result + indices) — the
+               HBM-traffic view, not buffer-assignment capacity,
+       wire:   collectives with ring-algorithm bytes-on-wire (x multiplier).
+
+This replaces the depth-heuristic in hlo_analysis.parse_collectives with
+exact trip counts read from the loops themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_CFG = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(?P<type>\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<inst>[a-z][a-z0-9\-]*)\((?P<operands>[^)]*)\)(?P<attrs>.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_REF = re.compile(r"%([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+# ops whose operand/result buffers are aliased or free — no HBM traffic
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "after-all", "partition-id",
+               "replica-id", "iota", "rng-bit-generator"}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[List[int]]]:
+    """(total bytes, list of dims lists) for a possibly-tuple type."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(ds)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    inst: str
+    type_str: str
+    operands: List[str]
+    raw_operands: str
+    attrs: str
+    bytes_: int
+    shapes: List[List[int]]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    ops: List[_Op]
+    table: Dict[str, _Op]
+
+
+def _parse_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = _Comp(m.group(2), bool(m.group(1)), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        bytes_, shapes = _shape_info(m.group("type"))
+        op = _Op(m.group(1), m.group("inst"), m.group("type"),
+                 _REF.findall(m.group("operands")), m.group("operands"),
+                 m.group("attrs"), bytes_, shapes)
+        cur.ops.append(op)
+        cur.table[op.name] = op
+    return comps
+
+
+def _ref_attr(attrs: str, key: str) -> List[str]:
+    out = []
+    for m in re.finditer(key + r"=%?([\w.\-]+)", attrs):
+        out.append(m.group(1))
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if m:
+        out.extend(_REF.findall(m.group(1)))
+    return out
+
+
+def _cond_trip(cond_lines: List[_Op]) -> int:
+    """Trip count = the integer constant the induction variable is compared
+    against in the loop condition (scan emits `compare(i, constant(L))`)."""
+    ints = []
+    for op in cond_lines:
+        if op.inst != "constant":
+            continue
+        m = re.match(r"\s*(\d+)\s*$", op.raw_operands)
+        if m:
+            ints.append(int(m.group(1)))
+    return max(ints) if ints else 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    wire_by_kind: Dict[str, float]
+    loops: List[Tuple[str, int]]          # (body computation, trip count)
+    n_collectives: int
+
+    def summary(self) -> str:
+        rows = [f"  flops/device      {self.flops_per_device/1e12:10.3f} T",
+                f"  bytes/device      {self.bytes_per_device/2**30:10.2f} GiB",
+                f"  wire bytes/device {self.wire_bytes_per_device/2**30:10.3f} GiB"]
+        for k, v in sorted(self.wire_by_kind.items()):
+            rows.append(f"    {k:18s} {v/2**30:10.3f} GiB")
+        rows.append("  loops: " + ", ".join(f"{n}x{t}" for n, t in self.loops[:8]))
+        return "\n".join(rows)
+
+
+def _dot_flops(op: _Op, table: Dict[str, _Op]) -> float:
+    _, res_shapes = _shape_info(op.type_str)
+    if not res_shapes:
+        return 0.0
+    res_elems = 1
+    for d in res_shapes[0]:
+        res_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if m and op.operands:
+        lhs = table.get(op.operands[0])
+        if lhs is not None and lhs.shapes:
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs.shapes[0]):
+                    contract *= lhs.shapes[0][int(idx)]
+    return 2.0 * res_elems * contract
+
+
+def _op_traffic(op: _Op, table: Dict[str, _Op],
+                dus_fusions: Optional[set] = None) -> float:
+    """HBM bytes for one top-level op (read operands + write result).
+
+    In-place semantics: dynamic-update-slice — bare or as a fusion whose
+    root is one (XLA's in-place DUS fusion; the aliased big operand is not
+    rewritten) — costs 2x the update slice, i.e. everything but the
+    largest operand.
+    """
+    if op.inst in _NO_TRAFFIC:
+        return 0.0
+    if op.inst == "dynamic-update-slice":
+        upd = table.get(op.operands[1]) if len(op.operands) > 1 else None
+        return 2.0 * (upd.bytes_ if upd else 0)
+    if op.inst in ("dynamic-slice", "gather"):
+        return 2.0 * op.bytes_
+    operand_bytes = [table[o].bytes_ for o in op.operands if o in table]
+    if op.inst == "fusion" and dus_fusions:
+        called = _ref_attr(op.attrs, "calls")
+        if called and called[0] in dus_fusions and operand_bytes:
+            return 2.0 * (sum(operand_bytes) - max(operand_bytes))
+    return float(op.bytes_) + sum(operand_bytes)
+
+
+def _wire_bytes(op: _Op) -> Tuple[str, float]:
+    kind = op.inst.replace("-start", "")
+    bytes_ = op.bytes_
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+    if m:
+        g = int(m.group(2))
+    else:
+        m = re.search(r"replica_groups=\{\{([0-9,]*)\}", op.attrs)
+        g = len(m.group(1).split(",")) if m else 2
+    if g <= 1:
+        return kind, 0.0
+    if kind == "all-gather":
+        wire = bytes_ * (g - 1) / g
+    elif kind == "all-reduce":
+        wire = 2 * bytes_ * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = bytes_ * (g - 1)
+    elif kind == "all-to-all":
+        wire = bytes_ * (g - 1) / g
+    else:  # collective-permute
+        wire = bytes_
+    return kind, wire
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+
+    # classify references
+    fusion_calls: Dict[str, List[str]] = {}   # parent -> fused comps
+    helpers = set()
+    whiles: List[Tuple] = []   # (parent, body, cond, trip_from_cfg)
+    branches: Dict[str, List[str]] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.inst == "fusion":
+                for c in _ref_attr(op.attrs, "calls"):
+                    fusion_calls.setdefault(comp.name, []).append(c)
+            for c in _ref_attr(op.attrs, "to_apply"):
+                helpers.add(c)
+            if op.inst == "while":
+                body = _ref_attr(op.attrs, "body")
+                cond = _ref_attr(op.attrs, "condition")
+                if body and cond:
+                    m = _TRIP_CFG.search(op.attrs)
+                    trip = int(m.group(1)) if m else None
+                    whiles.append((comp.name, body[0], cond[0], trip))
+            if op.inst == "conditional":
+                for key in ("branch_computations", "true_computation",
+                            "false_computation"):
+                    branches.setdefault(comp.name, []).extend(
+                        _ref_attr(op.attrs, key))
+
+    # multipliers via BFS from entry
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: Dict[str, float] = {}
+    if entry:
+        mult[entry] = 1.0
+    loops: List[Tuple[str, int]] = []
+    changed = True
+    while changed:
+        changed = False
+        for parent, body, cond, trip_cfg in whiles:
+            if parent in mult and body not in mult:
+                trip = trip_cfg if trip_cfg is not None else (
+                    _cond_trip(comps[cond].ops) if cond in comps else 1)
+                mult[body] = mult[parent] * max(trip, 1)
+                loops.append((body, trip))
+                changed = True
+        for parent, fused in fusion_calls.items():
+            for c in fused:
+                if parent in mult and c not in mult:
+                    mult[c] = mult[parent]
+                    changed = True
+        for parent, brs in branches.items():
+            for c in brs:
+                if parent in mult and c not in mult:
+                    mult[c] = mult[parent]
+                    changed = True
+
+    cond_names = {c for _, _, c, _ in whiles}
+    fused_names = {c for v in fusion_calls.values() for c in v}
+    # fusions that update a buffer in place: they contain a
+    # dynamic-update-slice and their result is the same size as their
+    # largest input (XLA aliases it; only the slice is written)
+    dus_fusions = set()
+    for name in fused_names:
+        comp = comps.get(name)
+        if comp and any(o.inst == "dynamic-update-slice" for o in comp.ops):
+            dus_fusions.add(name)
+
+    flops = 0.0
+    traffic = 0.0
+    wire = 0.0
+    wire_by_kind: Dict[str, float] = {}
+    n_coll = 0
+    for comp in comps.values():
+        m = mult.get(comp.name)
+        if m is None:
+            continue  # unreachable / helper-only
+        toplevel = (comp.is_entry
+                    or (comp.name not in fused_names
+                        and comp.name not in helpers
+                        and comp.name not in cond_names))
+        for op in comp.ops:
+            if op.inst in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp.table)
+            if not toplevel:
+                continue
+            if op.inst in _COLLECTIVES:
+                kind, w = _wire_bytes(op)
+                wire += m * w
+                wire_by_kind[kind] = wire_by_kind.get(kind, 0.0) + m * w
+                n_coll += 1
+                traffic += m * 2 * op.bytes_
+                continue
+            traffic += m * _op_traffic(op, comp.table, dus_fusions)
+    return HloCost(flops, traffic, wire, wire_by_kind, loops, n_coll)

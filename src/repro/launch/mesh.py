@@ -1,0 +1,29 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state).
+
+Single pod: 256 chips as (16, 16) ("data", "model").
+Multi pod:  2 pods x 256 chips as (2, 16, 16) ("pod", "data", "model");
+the "pod" axis crosses DCN — gradient all-reduce (optionally posit8-
+compressed, runtime/compression.py) is the only traffic on it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1,
+                   devices=None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    shape = (pod, data, model) if pod > 1 else (data, model)
+    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
+    return jax.make_mesh(shape, axes, devices=devices)

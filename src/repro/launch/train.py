@@ -1,0 +1,239 @@
+"""Training step builder + CLI driver.
+
+``make_train_step`` assembles the full production step:
+
+  microbatch gradient accumulation (lax.scan, f32 accumulators)
+  -> optional posit8-compressed cross-pod gradient mean
+     (shard_map manual over "pod", GSPMD auto over data/model)
+  -> global-norm clip + AdamW (optionally posit8-compressed moments)
+
+The CLI driver runs a real training loop on whatever devices exist:
+data pipeline -> jit train step (donated state) -> async checkpoints
+(auto-resume) -> straggler monitor. ``--smoke`` shrinks the arch so the
+loop runs on this CPU container; the same entry point drives a pod.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
+from repro.nn.models import LM, build_model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+from repro.runtime.compression import compressed_grad_transform
+
+__all__ = ["make_train_state", "make_train_step", "opt_config_from_run"]
+
+
+def opt_config_from_run(rcfg: RunConfig) -> OptConfig:
+    return OptConfig(
+        learning_rate=rcfg.learning_rate,
+        warmup_steps=rcfg.warmup_steps,
+        total_steps=rcfg.total_steps,
+        weight_decay=rcfg.weight_decay,
+        grad_clip=rcfg.grad_clip,
+        quant="posit8" if rcfg.opt_state_quant == "posit8" else "none",
+    )
+
+
+def make_train_state(model: LM, key) -> Dict[str, Any]:
+    params = model.init(key)
+    state = {"params": params,
+             "opt": init_opt_state(params, opt_config_from_run(model.rcfg).quant)}
+    if model.rcfg.grad_compression == "posit8_ef":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_train_state(model: LM) -> Dict[str, Any]:
+    return jax.eval_shape(lambda: make_train_state(model, jax.random.PRNGKey(0)))
+
+
+def state_shardings(model: LM, abstract: Optional[Dict[str, Any]] = None):
+    """NamedSharding tree for the train state: opt moments like params.
+
+    posit8 moments are QuantizedTensor leaves: codes shard like the param,
+    the (tiny) per-tensor scale is replicated.
+    """
+    from jax.sharding import NamedSharding
+    from repro.core.quantizers import QuantizedTensor
+
+    abstract = abstract or abstract_train_state(model)
+    p_shard = model.param_shardings(abstract["params"])
+    mesh = model.ctx.mesh
+    repl = NamedSharding(mesh, P()) if mesh is not None else None
+
+    def like_params(moments):
+        leaves_s, treedef = jax.tree.flatten(p_shard,
+                                             is_leaf=lambda x: x is None)
+        m_objs = treedef.flatten_up_to(moments)
+        out = []
+        for s, m in zip(leaves_s, m_objs):
+            if isinstance(m, QuantizedTensor):
+                out.append(QuantizedTensor(s, repl, m.spec))
+            else:
+                out.append(s)
+        return treedef.unflatten(out)
+
+    out = {"params": p_shard,
+           "opt": {"m": like_params(abstract["opt"]["m"]),
+                   "v": like_params(abstract["opt"]["v"]),
+                   "count": repl}}
+    if "ef" in abstract:
+        out["ef"] = p_shard
+    return out
+
+
+def batch_shardings(model: LM, batch_abstract):
+    ctx = model.ctx
+    def spec(leaf):
+        ax = ("batch",) + (None,) * (leaf.ndim - 1)
+        return ctx.sharding(ax, leaf.shape)
+    return jax.tree.map(spec, batch_abstract)
+
+
+def make_train_step(model: LM, mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics). jit it with
+    donate_argnums=(0,) and the sharding trees from state_shardings."""
+    rcfg = model.rcfg
+    ocfg = opt_config_from_run(rcfg)
+    n_micro = max(rcfg.microbatch, 1)
+
+    def loss_fn(params, batch):
+        loss, _ = model.loss(params, batch)
+        return loss
+
+    def grads_plain(params, batch):
+        if n_micro == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        micro = jax.tree.map(
+            lambda x: x.reshape(n_micro, B // n_micro, *x.shape[1:]), batch)
+
+        def step(acc, mb):
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) / n_micro, acc, g)
+            return acc, loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(step, zeros, micro)
+        return jnp.mean(losses), grads
+
+    compression = rcfg.grad_compression
+
+    def train_step(state, batch):
+        params = state["params"]
+        if compression in ("posit8", "posit8_ef") and mesh is not None \
+                and "pod" in mesh.axis_names:
+            use_ef = compression == "posit8_ef"
+
+            def per_pod(params, batch, ef):
+                loss, grads = grads_plain(params, batch)
+                grads, new_ef = compressed_grad_transform(
+                    grads, "pod", N=8, ES=2, residuals=ef if use_ef else None)
+                loss = jax.lax.pmean(loss, "pod")
+                return loss, grads, (new_ef if use_ef else 0)
+
+            ef_in = state.get("ef") if use_ef else None
+            loss, grads, new_ef = jax.shard_map(
+                per_pod, mesh=mesh,
+                in_specs=(P(), P("pod"), P()),
+                out_specs=(P(), P(), P()),
+                axis_names={"pod"}, check_vma=False,
+            )(params, batch, ef_in)
+        else:
+            loss, grads = grads_plain(params, batch)
+            new_ef = state.get("ef")
+        new_params, new_opt, metrics = apply_updates(
+            params, grads, state["opt"], ocfg)
+        metrics["loss"] = loss
+        new_state = {"params": new_params, "opt": new_opt}
+        if "ef" in state:
+            new_state["ef"] = new_ef
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--opt-quant", default="none", choices=["none", "posit8"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    from repro.data import DataConfig, synthetic_batch
+    from repro.runtime import CheckpointManager, StepTimeMonitor
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = smoke_cfg(cfg)
+    rcfg = RunConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1),
+                     microbatch=args.microbatch, opt_state_quant=args.opt_quant,
+                     remat="block")
+    model = build_model(cfg, rcfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+
+    state = make_train_state(model, jax.random.PRNGKey(rcfg.seed))
+    start = 0
+    manager = None
+    if args.ckpt_dir:
+        manager = CheckpointManager(args.ckpt_dir, keep=3)
+        latest = manager.latest_step()
+        if latest is not None:
+            print(f"resuming from step {latest}")
+            state = manager.restore(latest)
+            start = latest + 1
+
+    step_fn = jax.jit(make_train_step(model), donate_argnums=(0,))
+    mon = StepTimeMonitor()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in synthetic_batch(dc, step).items()}
+        mon.start()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        ev = mon.stop()
+        if ev:
+            print(f"[straggler] step={ev.step} dur={ev.duration:.3f}s z={ev.zscore:.1f}")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}")
+        if manager and (step % args.ckpt_every == 0 or step == args.steps - 1):
+            manager.save(step, state)
+    if manager:
+        manager.wait()
+    print(mon.report())
+
+
+if __name__ == "__main__":
+    main()

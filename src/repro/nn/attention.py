@@ -1,0 +1,374 @@
+"""GQA attention: chunked (flash-style) causal/bidirectional attention for
+train/prefill, cache-based decode, TP mode selection with divisibility-aware
+fallbacks, rotary embeddings, optional qk-norm (chameleon).
+
+TP modes (model axis = tp):
+  kv    — kv heads divide tp: shard kv-head group axis (no extra collectives)
+  rep   — q-heads-per-group divide tp: shard the rep axis; k/v replicated
+  dim   — fallback: shard head_dim (contracting): GSPMD inserts psum partials
+The mode is picked per architecture (see DESIGN.md §4); llama3's 8 kv groups
+use ``rep`` (128/8 = 16 q-heads per group), llama4's 40 heads use ``dim``.
+
+Decode uses a sequence-sharded KV cache ("kv_seq" -> model): GSPMD partitions
+the softmax reduction into per-chip partial max/sum + tiny all-reduces — the
+flash-decoding pattern — so a 500k-token cache never moves.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (Param, apply_rotary, dense_init, matmul_param,
+                     param_value, rmsnorm, rotary_cos_sin)
+
+NEG_INF = -1e30
+
+
+def attn_tp_mode(n_heads: int, n_kv_heads: int, tp: int) -> str:
+    """TP strategy for (H, G, tp):
+
+    kv      G % tp == 0: shard the kv-head axis (zero redundancy)
+    rep     R % tp == 0: shard the rep axis, replicate k/v per group
+    expand  H % tp == 0: repeat k/v to H heads and shard the full head
+            axis (Megatron GQA fallback — kv memory/compute replicates
+            R/tp-fold but q-side compute shards exactly; without this the
+            partitioner replicates the whole attention, 16x the flops —
+            EXPERIMENTS.md §Perf iter 1)
+    none    nothing divides: replicated attention (documented fallback)
+    """
+    if tp <= 1:
+        return "kv"
+    if n_kv_heads % tp == 0:
+        return "kv"
+    if n_kv_heads and (n_heads // n_kv_heads) % tp == 0:
+        return "rep"
+    if n_heads % tp == 0:
+        return "expand"
+    return "none"
+
+
+def _q_logical(mode: str):
+    # q laid out (B, S, G, rep, Dh); expand mode rewrites to (B, S, H, 1, Dh)
+    if mode in ("kv", "expand"):
+        return ("batch", "seq_attn", "kv_heads", None, "head_dim")
+    if mode == "rep":
+        return ("batch", "seq_attn", None, "heads", "head_dim")
+    return ("batch", "seq_attn", None, None, None)
+
+
+def _kv_logical(mode: str):
+    # k/v laid out (B, S, G, Dh); expand mode repeats to (B, S, H, Dh)
+    if mode in ("kv", "expand"):
+        return ("batch", "seq_attn", "kv_heads", "head_dim")
+    if mode == "rep":
+        return ("batch", "seq_attn", None, "head_dim")
+    return ("batch", "seq_attn", None, None)
+
+
+def attn_init(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    d, H, G, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], d, (H, Dh), dtype=dtype),
+        "wk": dense_init(ks[1], d, (G, Dh), dtype=dtype),
+        "wv": dense_init(ks[2], d, (G, Dh), dtype=dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), dtype)
+        p["k_norm"] = jnp.ones((Dh,), dtype)
+    return p
+
+
+def attn_logical(cfg) -> dict:
+    p = {
+        "wq": ("p_embed", "heads", "head_dim"),
+        "wk": ("p_embed", "kv_heads", "head_dim"),
+        "wv": ("p_embed", "kv_heads", "head_dim"),
+        "wo": ("mlp", "p_embed"),  # (H*Dh, d): row dim always tp-divisible
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ("p_unsharded",)
+        p["k_norm"] = ("p_unsharded",)
+    return p
+
+
+def _maybe_expand(q, k, v, mode: str, H: int, R: int):
+    """expand mode: repeat k/v to the full head count and flatten q's
+    (G, R) to (H, 1) so the head axis shards exactly over the model axis."""
+    if mode != "expand":
+        return q, k, v
+    B, Sq = q.shape[:2]
+    Dh = q.shape[-1]
+    return (q.reshape(B, Sq, H, 1, Dh),
+            jnp.repeat(k, R, axis=2), jnp.repeat(v, R, axis=2))
+
+
+def _divisor_chunk(total: int, want: int) -> int:
+    want = max(1, min(want, total))
+    for c in range(want, 0, -1):
+        if total % c == 0:
+            return c
+    return 1
+
+
+def _blk_scores(q_blk, k_blk, scale, causal, qi, kvc, bias_offset, n_kv_full,
+                kj):
+    """(masked) attention scores for one (q-chunk, kv-block) pair, f32."""
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q_blk, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        qc = q_blk.shape[1]
+        qpos = bias_offset + qi + jnp.arange(qc)
+        kpos = kj * kvc + jnp.arange(kvc)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return s
+
+
+def _flash_fwd(causal, qc, kvc, bias_offset, q, k, v):
+    """Online-softmax forward. Returns (out (B,Sq,G,R,Dh), lse (B,G,R,Sq))."""
+    B, Sq, G, R, Dh = q.shape
+    Skv = k.shape[1]
+    scale = Dh ** -0.5
+    outs, lses = [], []
+    for qi in range(0, Sq, qc):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi, qc, axis=1)
+        q_end = qi + qc + bias_offset
+        kv_hi = Skv if not causal else min(Skv, ((q_end + kvc - 1) // kvc) * kvc)
+        n_kv = kv_hi // kvc
+
+        def body(carry, kj, q_blk=q_blk, qi=qi):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kvc, kvc, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kvc, kvc, axis=1)
+            s = _blk_scores(q_blk, k_blk, scale, causal, qi, kvc, bias_offset,
+                            n_kv, kj)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, G, R, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, G, R, qc), jnp.float32),
+                jnp.zeros((B, G, R, qc, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_kv))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.transpose(o, (0, 3, 1, 2, 4)).astype(q.dtype))
+        lses.append(m + jnp.log(jnp.maximum(l, 1e-30)))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    lse = jnp.concatenate(lses, axis=-1) if len(lses) > 1 else lses[0]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash(causal, qc, kvc, bias_offset, q, k, v):
+    out, _ = _flash_fwd(causal, qc, kvc, bias_offset, q, k, v)
+    return out
+
+
+def _flash_fwd_rule(causal, qc, kvc, bias_offset, q, k, v):
+    out, lse = _flash_fwd(causal, qc, kvc, bias_offset, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, qc, kvc, bias_offset, res, dout):
+    """Flash-attention backward: recompute P per block from (q,k,v,lse).
+
+    This is the memory fix that makes 32k-token training fit HBM: naive
+    autodiff through the online-softmax scan saves the (qc, kvc)
+    probability blocks and masks for every iteration (terabytes at 32k —
+    EXPERIMENTS.md §Perf iter 2); the custom VJP saves only q,k,v,out,lse
+    and rebuilds each block in the backward sweep, FLOPs for bytes —
+    the same trade the paper's PoFx makes (decode on the fly, store less).
+    """
+    q, k, v, out, lse = res
+    B, Sq, G, R, Dh = q.shape
+    Skv = k.shape[1]
+    scale = Dh ** -0.5
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                       # (B,Sq,G,R)
+    delta = jnp.transpose(delta, (0, 2, 3, 1))     # (B,G,R,Sq)
+    dq_chunks = []
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+    for qi in range(0, Sq, qc):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi, qc, axis=1)
+        do_blk = jax.lax.dynamic_slice_in_dim(dout, qi, qc, axis=1)
+        lse_blk = jax.lax.dynamic_slice_in_dim(lse, qi, qc, axis=-1)
+        dlt_blk = jax.lax.dynamic_slice_in_dim(delta, qi, qc, axis=-1)
+        q_end = qi + qc + bias_offset
+        kv_hi = Skv if not causal else min(Skv, ((q_end + kvc - 1) // kvc) * kvc)
+        n_kv = kv_hi // kvc
+
+        def body(carry, kj, q_blk=q_blk, do_blk=do_blk, lse_blk=lse_blk,
+                 dlt_blk=dlt_blk, qi=qi):
+            dq_acc, dk_acc, dv_acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kvc, kvc, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kvc, kvc, axis=1)
+            s = _blk_scores(q_blk, k_blk, scale, causal, qi, kvc, bias_offset,
+                            n_kv, kj)
+            p = jnp.exp(s - lse_blk[..., None])           # (B,G,R,qc,kvc)
+            dv_blk = jnp.einsum("bgrqk,bqgrd->bkgd", p,
+                                do_blk.astype(jnp.float32))
+            dp = jnp.einsum("bqgrd,bkgd->bgrqk", do_blk, v_blk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dlt_blk[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bgrqk,bkgd->bqgrd",
+                                         ds.astype(k_blk.dtype), k_blk,
+                                         preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bgrqk,bqgrd->bkgd", ds.astype(q_blk.dtype),
+                                q_blk, preferred_element_type=jnp.float32)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, kj * kvc, kvc, 1)
+                + dk_blk, kj * kvc, axis=1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, kj * kvc, kvc, 1)
+                + dv_blk, kj * kvc, axis=1)
+            return (dq_acc, dk_acc, dv_acc), None
+
+        init = (jnp.zeros((B, qc, G, R, Dh), jnp.float32), dk, dv)
+        (dq_blk, dk, dv), _ = jax.lax.scan(body, init, jnp.arange(n_kv))
+        dq_chunks.append(dq_blk)
+    dq = (jnp.concatenate(dq_chunks, axis=1) if len(dq_chunks) > 1
+          else dq_chunks[0])
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                    ctx, mode: str, bias_offset: int = 0) -> jax.Array:
+    """Online-softmax chunked attention with a flash (recompute) backward.
+
+    q: (B, Sq, G, R, Dh); k/v: (B, Skv, G, Dh). Python-unrolled q-chunk loop
+    so causal q-chunks only visit kv-chunks up to the diagonal (true FLOPs
+    savings, static shapes). bias_offset: k positions lead q by this offset
+    (prefill against an existing cache prefix).
+    """
+    Sq, Skv = q.shape[1], k.shape[1]
+    qc = _divisor_chunk(Sq, q_chunk)
+    kvc = _divisor_chunk(Skv, kv_chunk)
+    out = _flash(causal, qc, kvc, bias_offset, q, k, v)
+    return ctx.constrain(out, *_q_logical(mode))
+
+
+def decode_attention(q, k_cache, v_cache, pos, ctx, mode: str,
+                     bf16_compute: bool = False) -> jax.Array:
+    """One-token attention against a (possibly sequence-sharded) cache.
+
+    q: (B, 1, G, R, Dh); caches are HEADS-MAJOR (B, G, S, Dh) so the score
+    and attend einsums have (b, g) as leading batch dims and contract on
+    the minor axis — no full-cache transpose per layer per step (that
+    layout churn cost ~2 TB/step at llama3-405b decode_32k; §Perf iter C).
+    Plain softmax over S — GSPMD partitions the reductions over the
+    seq-sharded cache into the flash-decoding combine.
+    """
+    S = k_cache.shape[2]
+    scale = q.shape[-1] ** -0.5
+    # q/p ride in f32 (tiny); the cache side stays in its storage dtype —
+    # on TPU this is the native mixed-precision MXU path. (The CPU backend
+    # cannot execute a bf16xbf16->f32 dot thunk, which smoke tests would
+    # hit if both operands were cast down.)
+    qdt = k_cache.dtype if bf16_compute else jnp.float32
+    s = jnp.einsum("bqgrd,bgsd->bgrqs", q.astype(qdt), k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S) < pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqs,bgsd->bqgrd", p.astype(qdt), v_cache,
+                   preferred_element_type=jnp.float32)
+    return ctx.constrain(o.astype(q.dtype), *_q_logical(mode))
+
+
+def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
+                 positions: jax.Array, causal: bool = True,
+                 cache: Optional[dict] = None, cache_pos=None,
+                 xa: Optional[jax.Array] = None,
+                 use_kernel: bool = False):
+    """Full attention layer. Returns (y, new_cache_kv or None).
+
+    cache: {"k": (B,S,G,Dh), "v": ...} for decode (self) or precomputed
+    cross k/v (xa is ignored then). xa: encoder states for cross-attention.
+    """
+    B, Sq, _ = x.shape
+    H, G, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    R = H // G
+    tp = ctx.axis_size("model")
+    mode = attn_tp_mode(H, G, tp)
+
+    q = matmul_param(x, p["wq"], use_kernel=use_kernel).reshape(B, Sq, G, R, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+
+    if xa is not None:
+        # cross-attention: build k/v from encoder states (non-causal, no rope)
+        k = matmul_param(xa, p["wk"], use_kernel=use_kernel).reshape(B, -1, G, Dh)
+        v = matmul_param(xa, p["wv"], use_kernel=use_kernel).reshape(B, -1, G, Dh)
+        if cfg.qk_norm:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        new_kv = {"k": k, "v": v}
+        q, k, v = _maybe_expand(q, k, v, mode, H, R)
+        k = ctx.constrain(k, *_kv_logical(mode))
+        q = ctx.constrain(q, *_q_logical(mode))
+        y = flash_attention(q, k, v, causal=False, q_chunk=rcfg.attn_q_chunk,
+                            kv_chunk=rcfg.attn_kv_chunk, ctx=ctx, mode=mode)
+    elif cache is not None and Sq == 1:
+        if "k_static" in cache:  # precomputed cross-attention cache (no rope)
+            q = ctx.constrain(q, *_q_logical(mode))
+            y = decode_attention(q, cache["k_static"], cache["v_static"],
+                                 cache["len"], ctx, mode,
+                                 bf16_compute=rcfg.serve_bf16_compute)
+            new_kv = None
+        else:
+            # decode: rope at current position, update cache, attend
+            cos, sin = rotary_cos_sin(positions, Dh, cfg.rope_theta)
+            q = apply_rotary(q.reshape(B, Sq, H, Dh), cos, sin).reshape(B, Sq, G, R, Dh)
+            q = ctx.constrain(q, *_q_logical(mode))
+            k = matmul_param(x, p["wk"], use_kernel=use_kernel).reshape(B, Sq, G, Dh)
+            v = matmul_param(x, p["wv"], use_kernel=use_kernel).reshape(B, Sq, G, Dh)
+            if cfg.qk_norm:
+                k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+            k = apply_rotary(k, cos, sin)
+            # heads-major cache (B, G, S, Dh): in-place update of one column
+            kdt = cache["k"].dtype
+            zero = jnp.zeros((), jnp.int32)
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], jnp.swapaxes(k, 1, 2).astype(kdt),
+                (zero, zero, cache_pos, zero))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], jnp.swapaxes(v, 1, 2).astype(kdt),
+                (zero, zero, cache_pos, zero))
+            k_cache = ctx.constrain(k_cache, "batch", None, "kv_seq", "head_dim")
+            v_cache = ctx.constrain(v_cache, "batch", None, "kv_seq", "head_dim")
+            y = decode_attention(q, k_cache, v_cache, cache_pos + 1, ctx, mode,
+                                 bf16_compute=rcfg.serve_bf16_compute)
+            new_kv = {"k": k_cache, "v": v_cache}
+    else:
+        # train / prefill
+        cos, sin = rotary_cos_sin(positions, Dh, cfg.rope_theta)
+        q = apply_rotary(q.reshape(B, Sq, H, Dh), cos, sin).reshape(B, Sq, G, R, Dh)
+        k = matmul_param(x, p["wk"], use_kernel=use_kernel).reshape(B, Sq, G, Dh)
+        v = matmul_param(x, p["wv"], use_kernel=use_kernel).reshape(B, Sq, G, Dh)
+        if cfg.qk_norm:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        k = apply_rotary(k, cos, sin)
+        new_kv = {"k": k, "v": v}           # cache keeps the grouped heads
+        q, k, v = _maybe_expand(q, k, v, mode, H, R)
+        q = ctx.constrain(q, *_q_logical(mode))
+        k = ctx.constrain(k, *_kv_logical(mode))
+        v = ctx.constrain(v, *_kv_logical(mode))
+        y = flash_attention(q, k, v, causal=causal, q_chunk=rcfg.attn_q_chunk,
+                            kv_chunk=rcfg.attn_kv_chunk, ctx=ctx, mode=mode)
+    y = y.reshape(B, Sq, H * Dh).astype(x.dtype)
+    out = matmul_param(y, p["wo"], use_kernel=use_kernel)
+    return out, new_kv

@@ -1,0 +1,662 @@
+"""Model facade: one ``LM`` object per (ModelConfig, RunConfig, mesh).
+
+Provides, for every assigned family (dense / moe / encdec / ssm / hybrid):
+
+  init(key)            parameters (layer-stacked pytree, fp32 or bf16)
+  logical()            logical-axis tree (same treedef) for sharding
+  abstract_params()    ShapeDtypeStruct tree via eval_shape (dry-run: no alloc)
+  forward()            full-sequence logits (train / prefill)
+  loss()               vocab-parallel cross-entropy (+ MoE aux loss)
+  train_step()         grad accumulation + clip + AdamW (see repro.optim)
+  init_cache()         decode state (KV / SSM), sequence- or batch-sharded
+  prefill()/decode_step()  serving path; cache donated by the launcher
+
+The paper's technique enters through ``quantize_params``: eligible matmul
+weights become ``QuantizedTensor`` (normalized-posit codes + normalizer
+scale); every layer dispatches through ``matmul_param`` which routes
+quantized weights to the PoFx datapath. Norms / SSM recurrence params /
+router weights are excluded (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.quantizers import QuantSpec, QuantizedTensor, quantize
+from .layers import dense_init, matmul_param, param_value, rmsnorm
+from .sharding import ShardingCtx, make_ctx
+from . import transformer as T
+from . import ssm as S
+
+__all__ = ["LM", "build_model", "quantize_params", "input_specs", "ce_loss"]
+
+
+def _dt(name: str):
+    return {"f32": jnp.float32, "fp32": jnp.float32, "bf16": jnp.bfloat16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array, *, z_weight: float = 0.0):
+    """Vocab-parallel cross-entropy. logits (B,S,V) may be vocab-sharded;
+    every reduction is over the V axis so GSPMD lowers to per-shard partials
+    + a small all-reduce (no logits all-gather)."""
+    lg = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    shifted = lg - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+    ll = jnp.sum(lg * onehot, axis=-1)
+    nll = jnp.mean(lse - ll)
+    if z_weight:
+        nll = nll + z_weight * jnp.mean(jnp.square(lse))
+    return nll
+
+
+# ---------------------------------------------------------------------------
+# LM facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    rcfg: RunConfig
+    ctx: ShardingCtx
+    use_kernel: bool = False
+
+    # -- construction helpers ------------------------------------------------
+
+    @property
+    def act_dtype(self):
+        return _dt(getattr(self.rcfg, "activation_dtype", "bf16"))
+
+    @property
+    def param_dtype(self):
+        return _dt(self.rcfg.weight_dtype)
+
+    @property
+    def n_groups(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "moe":
+            return cfg.n_layers // cfg.moe_every
+        return cfg.n_layers
+
+    def _hybrid_chunks(self):
+        """zamba2: layer-count chunks between shared-block applications."""
+        cfg = self.cfg
+        k, L = cfg.attn_every, cfg.n_layers
+        sizes = []
+        done = 0
+        while done < L:
+            sizes.append(min(k, L - done))
+            done += sizes[-1]
+        return sizes
+
+    # -- init / logical -------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, self.param_dtype
+        ks = jax.random.split(key, 8)
+        V, d = cfg.padded_vocab, cfg.d_model
+        params: Dict[str, Any] = {
+            "embed": dense_init(ks[0], V, d, scale=1.0, dtype=dt),
+            "ln_f": jnp.ones((d,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(ks[1], d, V, dtype=dt)
+        fam = cfg.family
+        if fam == "dense":
+            params["blocks"] = T.stack_init(T.dense_block_init, ks[2], cfg.n_layers, cfg, dt)
+        elif fam == "moe":
+            ng = self.n_groups
+            params["blocks"] = {"moe": T.stack_init(T.moe_block_init, ks[2], ng, cfg, dt)}
+            if cfg.moe_every > 1:
+                def group_dense(k, cfg=cfg, dt=dt):
+                    kk = jax.random.split(k, cfg.moe_every - 1)
+                    return jax.vmap(lambda q: T.dense_block_init(q, cfg, dt))(kk)
+                params["blocks"]["dense"] = T.stack_init(group_dense, ks[3], ng)
+        elif fam == "encdec":
+            params["enc_blocks"] = T.stack_init(
+                T.encdec_block_init, ks[2], cfg.n_enc_layers, cfg, dt)
+            params["enc_ln"] = jnp.ones((d,), dt)
+            params["blocks"] = T.stack_init(
+                functools.partial(T.encdec_block_init, cross=True),
+                ks[3], cfg.n_layers, cfg, dt)
+        elif fam == "ssm":
+            params["blocks"] = T.stack_init(T.mamba_block_init, ks[2], cfg.n_layers, cfg, dt)
+        elif fam == "hybrid":
+            params["blocks"] = T.stack_init(T.mamba_block_init, ks[2], cfg.n_layers, cfg, dt)
+            params["shared"] = T.dense_block_init(ks[3], cfg, dt)
+        else:
+            raise ValueError(f"unknown family {fam!r}")
+        return params
+
+    def logical(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        # Under posit8 gradient compression the step runs inside a
+        # shard_map whose "pod" axis is manual; XLA's PartitionGather
+        # CHECK-fails on a gather from a vocab-sharded table in that mode,
+        # so the embed table keeps its vocab dim replicated there (the
+        # d_model dim still FSDP-shards; unembed stays vocab-parallel —
+        # matmuls partition fine).
+        compressed = str(self.rcfg.grad_compression).startswith("posit8")
+        out: Dict[str, Any] = {
+            "embed": (None if compressed else "vocab", "p_embed"),
+            "ln_f": ("p_unsharded",),
+        }
+        if not cfg.tie_embeddings:
+            out["unembed"] = ("p_embed", "vocab")
+        fam = cfg.family
+        if fam == "dense":
+            out["blocks"] = T.stack_logical(T.dense_block_logical(cfg))
+        elif fam == "moe":
+            out["blocks"] = {"moe": T.stack_logical(T.moe_block_logical(cfg))}
+            if cfg.moe_every > 1:
+                out["blocks"]["dense"] = T.stack_logical(
+                    T.stack_logical(T.dense_block_logical(cfg)))
+        elif fam == "encdec":
+            out["enc_blocks"] = T.stack_logical(T.encdec_block_logical(cfg))
+            out["enc_ln"] = ("p_unsharded",)
+            out["blocks"] = T.stack_logical(T.encdec_block_logical(cfg, cross=True))
+        elif fam == "ssm":
+            out["blocks"] = T.stack_logical(T.mamba_block_logical(cfg))
+        elif fam == "hybrid":
+            out["blocks"] = T.stack_logical(T.mamba_block_logical(cfg))
+            out["shared"] = T.dense_block_logical(cfg)
+        return out
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_shardings(self, params_shape=None):
+        """NamedSharding tree matching abstract/concrete params."""
+        params_shape = params_shape or self.abstract_params()
+        logical = self.logical()
+        return jax.tree.map(
+            lambda leaf, ax: self.ctx.sharding(ax, leaf.shape),
+            params_shape, logical,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+    # -- forward (train / prefill) -------------------------------------------
+
+    def forward(self, params, tokens, *, frames=None) -> jax.Array:
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        B, Sq = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+        x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
+        fam = cfg.family
+        if fam == "dense":
+            def body(h, lp, _):
+                y, _ = T.dense_block_forward(lp, h, cfg, ctx, rcfg,
+                                             positions=positions,
+                                             use_kernel=self.use_kernel)
+                return y, None
+            x, _ = T.scan_blocks(body, x, params["blocks"], rcfg, length=cfg.n_layers)
+        elif fam == "moe":
+            def body(h, lp, _):
+                if "dense" in params["blocks"]:
+                    for i in range(cfg.moe_every - 1):
+                        dlp = jax.tree.map(lambda a: a[i], lp["dense"])
+                        h, _ = T.dense_block_forward(dlp, h, cfg, ctx, rcfg,
+                                                     positions=positions,
+                                                     use_kernel=self.use_kernel)
+                h, _ = T.moe_block_forward(lp["moe"], h, cfg, ctx, rcfg,
+                                           positions=positions,
+                                           use_kernel=self.use_kernel)
+                return h, None
+            x, _ = T.scan_blocks(body, x, params["blocks"], rcfg, length=self.n_groups)
+        elif fam == "encdec":
+            assert frames is not None, "encdec forward needs encoder frames"
+            xa = self._encode(params, frames)
+            def body(h, lp, _):
+                y, _ = T.decoder_xblock_forward(lp, h, cfg, ctx, rcfg,
+                                                positions=positions, xa=xa,
+                                                use_kernel=self.use_kernel)
+                return y, None
+            x, _ = T.scan_blocks(body, x, params["blocks"], rcfg, length=cfg.n_layers)
+        elif fam == "ssm":
+            def body(h, lp, _):
+                y, _ = T.mamba_block_forward(lp, h, cfg, ctx, variant="mamba1",
+                                             use_kernel=self.use_kernel)
+                return y, None
+            x, _ = T.scan_blocks(body, x, params["blocks"], rcfg, length=cfg.n_layers)
+        elif fam == "hybrid":
+            x = self._hybrid_forward(params, x, positions)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        w_un = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        if cfg.tie_embeddings:
+            logits = matmul_param(x, jnp.swapaxes(param_value(w_un, x.dtype), 0, 1))
+            return ctx.constrain(logits, "batch", "seq_attn", "vocab")
+        return T.unembed(x, w_un, ctx, use_kernel=self.use_kernel)
+
+    def _encode(self, params, frames):
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        B, Se, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(Se)[None, :], (B, Se))
+        xa = frames.astype(self.act_dtype)
+        xa = ctx.constrain(xa, "batch", "seq", None)
+        def body(h, lp, _):
+            y, _ = T.dense_block_forward(lp, h, cfg, ctx, rcfg, positions=pos,
+                                         causal=False, use_kernel=self.use_kernel)
+            return y, None
+        xa, _ = T.scan_blocks(body, xa, params["enc_blocks"], rcfg,
+                              length=cfg.n_enc_layers)
+        return rmsnorm(xa, params["enc_ln"], cfg.norm_eps)
+
+    def _hybrid_forward(self, params, x, positions):
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        chunks = self._hybrid_chunks()
+        off = 0
+        shared_fwd = T.dense_block_forward
+        if rcfg.remat == "block":
+            shared_fwd = jax.checkpoint(shared_fwd, static_argnums=(2, 3, 4))
+        for size in chunks:
+            x, _ = shared_fwd(params["shared"], x, cfg, ctx, rcfg,
+                              positions=positions, use_kernel=self.use_kernel)
+            sub = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
+            def body(h, lp, _):
+                y, _ = T.mamba_block_forward(lp, h, cfg, ctx, variant="mamba2",
+                                             use_kernel=self.use_kernel)
+                return y, None
+            x, _ = T.scan_blocks(body, x, sub, rcfg, length=size)
+            off += size
+        return x
+
+    # -- loss ------------------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits = self.forward(params, batch["tokens"], frames=batch.get("frames"))
+        nll = ce_loss(logits, batch["labels"])
+        return nll, {"loss": nll}
+
+    # -- decode ----------------------------------------------------------------
+
+    def _kv_cache(self, batch: int, max_len: int):
+        # heads-major (B, G, S, Dh): decode einsums contract on the minor
+        # axis with (b, g) batch dims — no per-step cache transpose.
+        cfg = self.cfg
+        kdt = _dt(self.rcfg.kv_cache_dtype) if self.rcfg.kv_cache_dtype != "int8" else jnp.bfloat16
+        G, Dh = cfg.n_kv_heads, cfg.d_head
+        return {"k": jnp.zeros((batch, G, max_len, Dh), kdt),
+                "v": jnp.zeros((batch, G, max_len, Dh), kdt)}
+
+    def init_cache(self, batch: int, max_len: int,
+                   enc_len: Optional[int] = None) -> Dict[str, Any]:
+        """Zero decode cache (stacked over layers/groups).
+
+        enc_len sizes the encdec cross-attention cache (defaults to max_len).
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        def stack(make, n):
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n)])
+        cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if fam == "dense":
+            cache["kv"] = stack(lambda: self._kv_cache(batch, max_len), cfg.n_layers)
+        elif fam == "moe":
+            ng = self.n_groups
+            cache["kv"] = {"moe": stack(lambda: self._kv_cache(batch, max_len), ng)}
+            if cfg.moe_every > 1:
+                cache["kv"]["dense"] = stack(
+                    lambda: stack(lambda: self._kv_cache(batch, max_len),
+                                  cfg.moe_every - 1), ng)
+        elif fam == "encdec":
+            cache["kv"] = stack(lambda: self._kv_cache(batch, max_len), cfg.n_layers)
+            cache["cross"] = stack(lambda: self._kv_cache(batch, enc_len or max_len),
+                                   cfg.n_layers)
+            cache["xlen"] = jnp.zeros((), jnp.int32)
+        elif fam == "ssm":
+            cache["ssm"] = stack(lambda: S.mamba1_init_cache(cfg, batch), cfg.n_layers)
+        elif fam == "hybrid":
+            cache["ssm"] = stack(lambda: S.mamba2_init_cache(cfg, batch), cfg.n_layers)
+            cache["shared_kv"] = stack(lambda: self._kv_cache(batch, max_len),
+                                       len(self._hybrid_chunks()))
+        return cache
+
+    def cache_logical(self) -> Dict[str, Any]:
+        """Logical axes for every cache leaf (seq-sharded KV for decode)."""
+        cfg = self.cfg
+        fam = cfg.family
+        kv = {"k": ("layers", "batch", None, "kv_seq", "head_dim"),
+              "v": ("layers", "batch", None, "kv_seq", "head_dim")}
+        out: Dict[str, Any] = {"pos": ()}
+        if fam == "dense":
+            out["kv"] = kv
+        elif fam == "moe":
+            out["kv"] = {"moe": kv}
+            if cfg.moe_every > 1:
+                out["kv"]["dense"] = {
+                    "k": ("layers", "layers2", "batch", None, "kv_seq", "head_dim"),
+                    "v": ("layers", "layers2", "batch", None, "kv_seq", "head_dim")}
+        elif fam == "encdec":
+            out["kv"] = kv
+            out["cross"] = kv
+            out["xlen"] = ()
+        elif fam == "ssm":
+            out["ssm"] = {"conv": ("layers", "batch", "conv", "d_inner"),
+                          "ssm": ("layers", "batch", "d_inner", "state")}
+        elif fam == "hybrid":
+            out["ssm"] = {"conv": ("layers", "batch", "conv", "d_inner2"),
+                          "ssm": ("layers", "batch", "heads_r", None, "state")}
+            out["shared_kv"] = kv
+        return out
+
+    def cache_shardings(self, batch: int, max_len: int):
+        abstract = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+        logical = self.cache_logical()
+        return jax.tree.map(
+            lambda leaf, ax: self.ctx.sharding(ax, leaf.shape),
+            abstract, logical,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+    def prefill(self, params, tokens, *, cache, frames=None):
+        """Run the full prompt, filling the cache. Returns (cache, last_logits).
+
+        Implemented as forward + cache writes per layer; decode-shape dry-run
+        only lowers decode_step, so prefill stays straightforward (chunked
+        attention still applies).
+        """
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        B, Sq = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+        x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
+        fam = cfg.family
+        max_len = _cache_len(cache)
+
+        def write_kv(layer_cache, new_kv):
+            # grouped (B, S, G, Dh) -> heads-major cache (B, G, S, Dh)
+            kdt = layer_cache["k"].dtype
+            k = jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k"], jnp.swapaxes(new_kv["k"], 1, 2).astype(kdt),
+                0, axis=2)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v"], jnp.swapaxes(new_kv["v"], 1, 2).astype(kdt),
+                0, axis=2)
+            return {"k": k, "v": v}
+
+        if fam == "dense":
+            def body(h, lp, lc):
+                y, kv = T.dense_block_forward(lp, h, cfg, ctx, rcfg,
+                                              positions=positions,
+                                              use_kernel=self.use_kernel)
+                return y, write_kv(lc, kv)
+            x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                      cache=cache["kv"], length=cfg.n_layers)
+            cache = dict(cache, kv=new_kv)
+        elif fam == "moe":
+            def body(h, lp, lc):
+                new_c = dict(lc)
+                if "dense" in params["blocks"]:
+                    dk = {"k": [], "v": []}
+                    for i in range(cfg.moe_every - 1):
+                        dlp = jax.tree.map(lambda a: a[i], lp["dense"])
+                        dlc = jax.tree.map(lambda a: a[i], lc["dense"])
+                        h, kv = T.dense_block_forward(dlp, h, cfg, ctx, rcfg,
+                                                      positions=positions,
+                                                      use_kernel=self.use_kernel)
+                        w = write_kv(dlc, kv)
+                        dk["k"].append(w["k"]); dk["v"].append(w["v"])
+                    new_c["dense"] = {"k": jnp.stack(dk["k"]), "v": jnp.stack(dk["v"])}
+                h, kv = T.moe_block_forward(lp["moe"], h, cfg, ctx, rcfg,
+                                            positions=positions,
+                                            use_kernel=self.use_kernel)
+                new_c["moe"] = write_kv(lc["moe"], kv)
+                return h, new_c
+            blocks_cache = {"moe": cache["kv"]["moe"]}
+            if "dense" in cache["kv"]:
+                blocks_cache["dense"] = cache["kv"]["dense"]
+            x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                      cache=blocks_cache, length=self.n_groups)
+            cache = dict(cache, kv=new_kv)
+        elif fam == "encdec":
+            assert frames is not None
+            xa = self._encode(params, frames)
+            def body(h, lp, lc):
+                y, kv = T.decoder_xblock_forward(lp, h, cfg, ctx, rcfg,
+                                                 positions=positions, xa=xa,
+                                                 use_kernel=self.use_kernel)
+                # also record cross-attn k/v once (static thereafter)
+                from .attention import attn_tp_mode
+                G, Dh = cfg.n_kv_heads, cfg.d_head
+                xk = matmul_param(xa, lp["xattn"]["wk"]).reshape(xa.shape[0], -1, G, Dh)
+                xv = matmul_param(xa, lp["xattn"]["wv"]).reshape(xa.shape[0], -1, G, Dh)
+                new_c = {"self": write_kv(lc["self"], kv),
+                         "cross": write_kv(lc["cross"], {"k": xk, "v": xv})}
+                return y, new_c
+            x, new_c = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                     cache={"self": cache["kv"], "cross": cache["cross"]},
+                                     length=cfg.n_layers)
+            cache = dict(cache, kv=new_c["self"], cross=new_c["cross"],
+                         xlen=jnp.asarray(frames.shape[1], jnp.int32))
+        elif fam == "ssm":
+            def body(h, lp, lc):
+                y, nc = T.mamba_block_forward(lp, h, cfg, ctx, cache=lc,
+                                              variant="mamba1",
+                                              use_kernel=self.use_kernel)
+                return y, nc
+            x, new_ssm = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                       cache=cache["ssm"], length=cfg.n_layers)
+            cache = dict(cache, ssm=new_ssm)
+        elif fam == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, positions, cache, write_kv)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        w_un = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        last = x[:, -1]
+        if cfg.tie_embeddings:
+            logits = matmul_param(last, jnp.swapaxes(param_value(w_un, x.dtype), 0, 1))
+        else:
+            logits = matmul_param(last, w_un, use_kernel=self.use_kernel)
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return cache, logits
+
+    def _hybrid_prefill(self, params, x, positions, cache, write_kv):
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        chunks = self._hybrid_chunks()
+        off = 0
+        shared_new = []
+        ssm_new = []
+        for ci, size in enumerate(chunks):
+            lc = jax.tree.map(lambda a: a[ci], cache["shared_kv"])
+            x, kv = T.dense_block_forward(params["shared"], x, cfg, ctx, rcfg,
+                                          positions=positions,
+                                          use_kernel=self.use_kernel)
+            shared_new.append(write_kv(lc, kv))
+            sub = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
+            subc = jax.tree.map(lambda a: a[off:off + size], cache["ssm"])
+            def body(h, lp, lcc):
+                y, nc = T.mamba_block_forward(lp, h, cfg, ctx, cache=lcc,
+                                              variant="mamba2",
+                                              use_kernel=self.use_kernel)
+                return y, nc
+            x, new_sub = T.scan_blocks(body, x, sub, rcfg, cache=subc, length=size)
+            ssm_new.append(new_sub)
+            off += size
+        cache = dict(cache)
+        cache["shared_kv"] = jax.tree.map(lambda *xs: jnp.stack(xs), *shared_new)
+        cache["ssm"] = jax.tree.map(lambda *xs: jnp.concatenate(xs), *ssm_new)
+        return x, cache
+
+    def decode_step(self, params, cache, tokens):
+        """One decode step. tokens: (B, 1). Returns (new_cache, logits (B, V))."""
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
+        fam = cfg.family
+        new_cache = dict(cache, pos=pos + 1)
+        if fam == "dense":
+            def body(h, lp, lc):
+                y, kv = T.dense_block_forward(lp, h, cfg, ctx, rcfg,
+                                              positions=positions, cache=lc,
+                                              cache_pos=pos,
+                                              use_kernel=self.use_kernel)
+                return y, kv
+            x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                      cache=cache["kv"], length=cfg.n_layers)
+            new_cache["kv"] = new_kv
+        elif fam == "moe":
+            def body(h, lp, lc):
+                new_c = dict(lc)
+                if "dense" in params["blocks"]:
+                    ks, vs = [], []
+                    for i in range(cfg.moe_every - 1):
+                        dlp = jax.tree.map(lambda a: a[i], lp["dense"])
+                        dlc = jax.tree.map(lambda a: a[i], lc["dense"])
+                        h, kv = T.dense_block_forward(dlp, h, cfg, ctx, rcfg,
+                                                      positions=positions,
+                                                      cache=dlc, cache_pos=pos,
+                                                      use_kernel=self.use_kernel)
+                        ks.append(kv["k"]); vs.append(kv["v"])
+                    new_c["dense"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+                h, kv = T.moe_block_forward(lp["moe"], h, cfg, ctx, rcfg,
+                                            positions=positions, cache=lc["moe"],
+                                            cache_pos=pos,
+                                            use_kernel=self.use_kernel)
+                new_c["moe"] = kv
+                return h, new_c
+            blocks_cache = {"moe": cache["kv"]["moe"]}
+            if "dense" in cache["kv"]:
+                blocks_cache["dense"] = cache["kv"]["dense"]
+            x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                      cache=blocks_cache, length=self.n_groups)
+            new_cache["kv"] = new_kv
+        elif fam == "encdec":
+            def body(h, lp, lc):
+                merged = {"k": lc["self"]["k"], "v": lc["self"]["v"],
+                          "xk": lc["cross"]["k"], "xv": lc["cross"]["v"],
+                          "xlen": cache["xlen"]}
+                y, kv = T.decoder_xblock_forward(lp, h, cfg, ctx, rcfg,
+                                                 positions=positions,
+                                                 cache=merged, cache_pos=pos,
+                                                 use_kernel=self.use_kernel)
+                return y, {"self": kv, "cross": lc["cross"]}
+            x, new_c = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                     cache={"self": cache["kv"], "cross": cache["cross"]},
+                                     length=cfg.n_layers)
+            new_cache["kv"] = new_c["self"]
+            new_cache["cross"] = new_c["cross"]
+        elif fam == "ssm":
+            def body(h, lp, lc):
+                y, nc = T.mamba_block_forward(lp, h, cfg, ctx, cache=lc,
+                                              variant="mamba1",
+                                              use_kernel=self.use_kernel)
+                return y, nc
+            x, new_ssm = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                       cache=cache["ssm"], length=cfg.n_layers)
+            new_cache["ssm"] = new_ssm
+        elif fam == "hybrid":
+            chunks = self._hybrid_chunks()
+            off = 0
+            shared_new, ssm_new = [], []
+            for ci, size in enumerate(chunks):
+                lc = jax.tree.map(lambda a: a[ci], cache["shared_kv"])
+                x, kv = T.dense_block_forward(params["shared"], x, cfg, ctx, rcfg,
+                                              positions=positions, cache=lc,
+                                              cache_pos=pos,
+                                              use_kernel=self.use_kernel)
+                shared_new.append(kv)
+                sub = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
+                subc = jax.tree.map(lambda a: a[off:off + size], cache["ssm"])
+                def body(h, lp, lcc):
+                    y, nc = T.mamba_block_forward(lp, h, cfg, ctx, cache=lcc,
+                                                  variant="mamba2",
+                                                  use_kernel=self.use_kernel)
+                    return y, nc
+                x, new_sub = T.scan_blocks(body, x, sub, rcfg, cache=subc, length=size)
+                ssm_new.append(new_sub)
+                off += size
+            new_cache["shared_kv"] = jax.tree.map(lambda *xs: jnp.stack(xs), *shared_new)
+            new_cache["ssm"] = jax.tree.map(lambda *xs: jnp.concatenate(xs), *ssm_new)
+        x = rmsnorm(x[:, 0], params["ln_f"], cfg.norm_eps)
+        w_un = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        if cfg.tie_embeddings:
+            logits = matmul_param(x, jnp.swapaxes(param_value(w_un, x.dtype), 0, 1))
+        else:
+            logits = matmul_param(x, w_un, use_kernel=self.use_kernel)
+        return new_cache, self.ctx.constrain(logits, "batch", "vocab")
+
+
+def _cache_len(cache) -> int:
+    if "kv" in cache:
+        leaf = cache["kv"]["moe"]["k"] if isinstance(cache["kv"], dict) and "moe" in cache["kv"] \
+            else cache["kv"]["k"]
+        return leaf.shape[2]
+    return 0
+
+
+def build_model(cfg: ModelConfig, rcfg: RunConfig, mesh=None,
+                use_kernel: bool = False) -> LM:
+    ctx = make_ctx(mesh, sequence_parallel=rcfg.sequence_parallel)
+    return LM(cfg, rcfg, ctx, use_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Post-training quantization of a parameter tree (the paper's technique)
+# ---------------------------------------------------------------------------
+
+_NEVER_QUANT = ("ln", "norm", "A_log", "dt_bias", "D", "router", "conv_w",
+                "conv_b", "q_norm", "k_norm")
+
+
+def quantize_params(params, spec: QuantSpec, *, quant_embed: bool = True):
+    """Convert eligible weight matrices to QuantizedTensor storage.
+
+    Eligible = >=2D matmul weights (attention/MLP/MoE/SSM projections and,
+    optionally, embed/unembed). Norm scales, SSM recurrence params, conv
+    taps and MoE router weights stay float (DESIGN.md §5).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = "/".join(names)
+        # layer-stacked leaves must keep per-layer scales (leading dims stay
+        # mapped) so lax.scan can slice codes and scale together.
+        stack_depth = 0
+        if "blocks" in names or "enc_blocks" in names:
+            stack_depth = 2 if "dense" in names else 1
+        skip = (leaf.ndim < 2 + stack_depth
+                or any(t in name for t in _NEVER_QUANT)
+                or (not quant_embed and ("embed" in name)))
+        if skip:
+            out.append(leaf)
+            continue
+        fn = lambda w: quantize(w.astype(jnp.float32), spec, axis=-1)
+        for _ in range(stack_depth):
+            fn = jax.vmap(fn)
+        out.append(fn(jnp.asarray(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for one (arch, shape) cell.
+
+    train/prefill: {tokens, labels[, frames]}; decode: {tokens (B,1)} —
+    cache/params come from abstract_params / init_cache eval_shape.
+    """
+    B, Sq = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        spec = {"tokens": jax.ShapeDtypeStruct((B, Sq), i32),
+                "labels": jax.ShapeDtypeStruct((B, Sq), i32)}
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct((B, Sq, cfg.d_model), jnp.bfloat16)
+        return spec
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

@@ -1,0 +1,5 @@
+from .adamw import (OptConfig, apply_updates, global_norm, init_opt_state,
+                    lr_schedule)
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "lr_schedule",
+           "global_norm"]

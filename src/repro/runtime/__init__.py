@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager
+from .compression import posit_compressed_mean, compressed_grad_transform
+from .straggler import StepTimeMonitor
+
+__all__ = ["CheckpointManager", "posit_compressed_mean",
+           "compressed_grad_transform", "StepTimeMonitor"]

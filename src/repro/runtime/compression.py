@@ -1,0 +1,78 @@
+"""Posit-compressed cross-pod gradient reduction (beyond-paper).
+
+The paper compresses *stored/communicated weights* with normalized posits.
+Here the same codec compresses the slowest collective in multi-pod training:
+the cross-pod (DCN) gradient all-reduce. Each pod
+
+  1. (optionally) adds its error-feedback residual,
+  2. scales by a per-tensor power-of-two normalizer,
+  3. encodes to (N-1)-bit normalized posit codes (uint8 on the wire),
+  4. all-gathers CODES over the ``pod`` axis — (N-1)/32 of the fp32 bytes,
+     (N-1)/16 of bf16 — then decodes and means locally.
+
+Integration: the per-pod gradients come from a ``jax.shard_map`` whose
+manual axis set is {"pod"} — GSPMD still auto-partitions data/model inside
+— so the pod reduction is literally ours to implement (launch/train.py).
+
+Error feedback keeps the quantization *bias* out of SGD: the residual
+(g - decode(encode(g))) is added to the next step's gradient, making the
+compressed estimator unbiased over time (standard EF-SGD argument).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.normalized_posit import norm_decode, norm_encode_arith
+
+__all__ = ["posit_compressed_mean", "compressed_grad_transform"]
+
+
+def _pow2_scale(x: jax.Array) -> jax.Array:
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    return jnp.exp2(jnp.ceil(jnp.log2(amax))).astype(jnp.float32)
+
+
+def posit_compressed_mean(x: jax.Array, axis_name: str, *, N: int = 8,
+                          ES: int = 2,
+                          residual: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Mean of ``x`` over a *manual* mesh axis with posit-coded transport.
+
+    Must be called inside shard_map with ``axis_name`` manual. Returns
+    (mean, new_residual); new_residual is None iff residual is None.
+    """
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    scale = _pow2_scale(xf)
+    codes = norm_encode_arith(xf / scale, N, ES).astype(jnp.uint8)
+    if residual is not None:
+        local_decoded = norm_decode(codes.astype(jnp.int32), N, ES) * scale
+        new_residual = xf - local_decoded
+    else:
+        new_residual = None
+    # uint8 codes + one f32 scalar cross the DCN instead of f32 tensors.
+    g_codes = jax.lax.all_gather(codes, axis_name)            # (P, ...)
+    g_scale = jax.lax.all_gather(scale, axis_name)            # (P,)
+    vals = norm_decode(g_codes.astype(jnp.int32), N, ES)
+    shape = (-1,) + (1,) * (vals.ndim - 1)
+    mean = jnp.mean(vals * g_scale.reshape(shape), axis=0)
+    return mean.astype(x.dtype), new_residual
+
+
+def compressed_grad_transform(grads, axis_name: str, *, N: int = 8, ES: int = 2,
+                              residuals=None):
+    """Tree-mapped posit_compressed_mean. residuals: matching tree or None."""
+    if residuals is None:
+        out = jax.tree.map(
+            lambda g: posit_compressed_mean(g, axis_name, N=N, ES=ES)[0], grads)
+        return out, None
+    pairs = jax.tree.map(
+        lambda g, r: posit_compressed_mean(g, axis_name, N=N, ES=ES, residual=r),
+        grads, residuals)
+    means = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return means, res

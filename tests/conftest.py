@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; the 512-device dry-run sets its
+# own XLA_FLAGS in a separate process (see launch/dryrun.py).
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,118 @@
+"""Lightweight property-based testing harness.
+
+``hypothesis`` is not installed in this offline container, so this module
+provides the subset we need: seeded random strategies, a ``given``-style
+decorator running N examples, and greedy shrinking of failing array inputs
+(toward zeros / smaller magnitude) so failures are reported minimally.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+class Strategy:
+    def sample(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+    def shrink(self, value):
+        """Yield simpler candidate values (possibly none)."""
+        return iter(())
+
+
+class Floats(Strategy):
+    def __init__(self, lo=-1e4, hi=1e4, shape=(64,), special: bool = True):
+        self.lo, self.hi, self.shape, self.special = lo, hi, shape, special
+
+    def sample(self, rng):
+        x = rng.uniform(self.lo, self.hi, size=self.shape)
+        # mix in magnitudes across many scales (log-uniform) + specials,
+        # clipped back into [lo, hi]
+        logs = np.exp2(rng.uniform(-24, 12, size=self.shape)) * rng.choice([-1, 1], self.shape)
+        mask = rng.random(self.shape) < 0.5
+        x = np.where(mask, logs, x)
+        if self.special and x.size >= 4:
+            flat = x.reshape(-1)
+            flat[0] = 0.0
+            flat[1] = self.hi
+            flat[2] = self.lo
+            flat[3] = float(2.0 ** int(rng.integers(-20, 20)))
+        return np.clip(x, self.lo, self.hi).astype(np.float64)
+
+    def shrink(self, value):
+        v = np.asarray(value)
+        if np.count_nonzero(v) > 0:
+            yield np.zeros_like(v)
+            yield v / 2.0
+            half = v.copy().reshape(-1)
+            half[: half.size // 2] = 0
+            yield half.reshape(v.shape)
+
+
+class Ints(Strategy):
+    def __init__(self, lo, hi, shape=(64,)):
+        self.lo, self.hi, self.shape = lo, hi, shape
+
+    def sample(self, rng):
+        return rng.integers(self.lo, self.hi, size=self.shape, endpoint=True)
+
+    def shrink(self, value):
+        v = np.asarray(value)
+        if np.any(v != self.lo):
+            yield np.full_like(v, self.lo)
+            yield np.maximum(v // 2, self.lo)
+
+
+class Choice(Strategy):
+    def __init__(self, options: Sequence):
+        self.options = list(options)
+
+    def sample(self, rng):
+        return self.options[int(rng.integers(len(self.options)))]
+
+
+def given(seed: int = 0, examples: int = 50, **strategies: Strategy):
+    """Run ``fn(**kwargs)`` over ``examples`` sampled inputs; shrink failures."""
+
+    def deco(fn: Callable):
+        # NOTE: no functools.wraps — pytest would introspect __wrapped__ and
+        # treat the strategy parameters as fixtures.
+        def wrapper(*args):
+            rng = np.random.default_rng(seed)
+            for i in range(examples):
+                kwargs = {k: s.sample(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except AssertionError:
+                    kwargs = _shrink(fn, args, kwargs, strategies)
+                    short = {k: np.asarray(v).reshape(-1)[:8] for k, v in kwargs.items()}
+                    raise AssertionError(
+                        f"property failed on example {i}; minimal-ish input: {short}"
+                    ) from None
+        wrapper.__name__ = getattr(fn, "__name__", "property")
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def _shrink(fn, args, kwargs, strategies, rounds: int = 8):
+    cur = dict(kwargs)
+    for _ in range(rounds):
+        progressed = False
+        for k, strat in strategies.items():
+            for cand in itertools.islice(strat.shrink(cur[k]), 4):
+                trial = dict(cur)
+                trial[k] = cand
+                try:
+                    fn(*args, **trial)
+                except AssertionError:
+                    cur = trial
+                    progressed = True
+                    break
+        if not progressed:
+            break
+    return cur

@@ -1,0 +1,68 @@
+"""Behavioral analysis (Fig. 8) and Pareto/hypervolume (Tables 3/4) tests."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import QuantSpec, hypervolume, hypervolume_gain, pareto_front, pareto_mask
+from repro.core.analysis import default_spec_grid, sweep_configs, weight_error
+
+
+def test_pareto_mask_basic():
+    pts = np.array([[1.0, 1.0], [2.0, 2.0], [0.5, 3.0], [3.0, 0.5], [1.0, 1.0]])
+    mask = pareto_mask(pts)
+    assert mask[0] and mask[2] and mask[3]
+    assert not mask[1]
+
+
+def test_hypervolume_2d_exact():
+    pts = np.array([[1.0, 2.0], [2.0, 1.0]])
+    ref = np.array([3.0, 3.0])
+    # union of two rectangles: 2*1 + 1*2 - 1*1 = 3
+    assert hypervolume(pts, ref) == 3.0
+
+
+def test_hypervolume_3d_exact():
+    pts = np.array([[1.0, 1.0, 1.0]])
+    ref = np.array([2.0, 3.0, 4.0])
+    assert hypervolume(pts, ref) == 1.0 * 2.0 * 3.0
+
+
+def test_hypervolume_gain_positive_when_dominating():
+    base = np.array([[2.0, 2.0]])
+    extra = np.array([[1.0, 1.0]])
+    g = hypervolume_gain(base, extra, np.array([3.0, 3.0]))
+    assert g > 0
+
+
+def test_sweep_prunes_and_ranks():
+    rng = np.random.default_rng(0)
+    weights = {
+        "fc1": jnp.asarray((rng.standard_normal((64, 32)) * 0.08).astype(np.float32)),
+        "fc2": jnp.asarray((rng.standard_normal((32, 10)) * 0.2).astype(np.float32)),
+    }
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    layer_apply = {"fc1": (lambda w, x_: x_ @ w, x)}
+    specs = [QuantSpec(kind="fxp", M=8, F=7),
+             QuantSpec(kind="posit", N=8, ES=2),
+             QuantSpec(kind="posit", N=4, ES=3),   # terrible -> pruned at (a)
+             QuantSpec(kind="pofx", N=8, ES=2)]
+    rep = sweep_configs(weights, specs, layer_apply=layer_apply,
+                        end_to_end=lambda s: 1.0, prune_weight_err=0.3)
+    assert "posit(4,3)" in rep.pruned_at_a
+    assert "pofx(7,2,via_fxp)" in rep.survivors
+    assert "metric" in rep.per_config["fxp8"]
+    assert "config," in rep.table()
+
+
+def test_default_grid_covers_paper_sweep():
+    names = {s.kind for s in default_spec_grid()}
+    assert names == {"fxp", "posit", "pofx"}
+    assert len(default_spec_grid()) > 20
+
+
+def test_weight_error_monotone_in_bits():
+    """More posit bits -> lower quantization error (sanity)."""
+    rng = np.random.default_rng(5)
+    w = jnp.asarray((rng.standard_normal(4096) * 0.1).astype(np.float32))
+    errs = [weight_error(w, QuantSpec(kind="posit", N=N, ES=1))["avg_rel"]
+            for N in (5, 6, 7, 8)]
+    assert all(a > b for a, b in zip(errs, errs[1:]))

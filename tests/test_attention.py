@@ -1,0 +1,98 @@
+"""flash_attention (custom-vjp) vs naive softmax oracle: fwd + grads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import attn_tp_mode, decode_attention, flash_attention
+from repro.nn.sharding import make_ctx
+
+CTX = make_ctx(None)
+
+
+def naive(q, k, v, causal, offset=0):
+    Dh = q.shape[-1]
+    Sq, Skv = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q, k) * (Dh ** -0.5)
+    if causal:
+        mask = (jnp.arange(Skv)[None, :] <= offset + jnp.arange(Sq)[:, None])
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
+
+
+def _rand(shapes, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return [jax.random.normal(k, s, jnp.float32) for k, s in zip(keys, shapes)]
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("qc,kvc", [(8, 8), (16, 4), (64, 64), (13, 7)])
+def test_flash_matches_naive(causal, qc, kvc):
+    B, S, G, R, Dh = 2, 64, 2, 3, 16
+    q, k, v = _rand([(B, S, G, R, Dh), (B, S, G, Dh), (B, S, G, Dh)])
+    out = flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kvc,
+                          ctx=CTX, mode="kv")
+    ref = naive(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_grads_match_naive(causal):
+    B, S, G, R, Dh = 2, 32, 2, 2, 8
+    q, k, v = _rand([(B, S, G, R, Dh), (B, S, G, Dh), (B, S, G, Dh)], seed=3)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(
+            q, k, v, causal=causal, q_chunk=8, kv_chunk=8, ctx=CTX,
+            mode="kv")))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.sin(naive(q, k, v, causal)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_flash_bias_offset_prefix():
+    """bias_offset shifts causality: q tokens attend to an existing prefix."""
+    B, G, R, Dh = 1, 1, 1, 8
+    S_pre, S_new = 8, 8
+    q_all, k_all, v_all = _rand([(B, S_pre + S_new, G, R, Dh),
+                                 (B, S_pre + S_new, G, Dh),
+                                 (B, S_pre + S_new, G, Dh)], seed=5)
+    full = naive(q_all, k_all, v_all, causal=True)
+    out = flash_attention(q_all[:, S_pre:], k_all, v_all, causal=True,
+                          q_chunk=4, kv_chunk=4, ctx=CTX, mode="kv",
+                          bias_offset=S_pre)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, S_pre:]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_naive_row():
+    B, S, G, R, Dh = 2, 24, 2, 2, 8
+    q, k, v = _rand([(B, 1, G, R, Dh), (B, S, G, Dh), (B, S, G, Dh)], seed=7)
+    pos = 17
+    # decode caches are heads-major (B, G, S, Dh) — EXPERIMENTS.md §Perf iter C
+    k_hm, v_hm = jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+    out = decode_attention(q, k_hm, v_hm, jnp.asarray(pos), CTX, "kv")
+    ref = naive(q, k[:, :pos], v[:, :pos], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_tp_mode_selection():
+    assert attn_tp_mode(128, 8, 16) == "rep"      # llama3
+    assert attn_tp_mode(32, 4, 16) == "expand"    # yi-9b
+    assert attn_tp_mode(96, 8, 16) == "expand"    # nemotron
+    assert attn_tp_mode(16, 16, 16) == "kv"       # whisper/moonshot
+    assert attn_tp_mode(32, 32, 16) == "kv"       # zamba2
+    # llama4: 40 heads / 8 kv — nothing divides 16 -> replicated attention
+    # (documented fallback; DESIGN.md §Arch-applicability)
+    assert attn_tp_mode(40, 8, 16) == "none"
+    assert attn_tp_mode(12, 3, 16) == "none"
+    assert attn_tp_mode(8, 8, 1) == "kv"

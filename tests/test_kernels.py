@@ -1,0 +1,109 @@
+"""Pallas kernel tests: shape/dtype sweeps against the ref.py oracles
+(interpret mode on CPU), per the deliverable-(c) contract."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import QuantSpec, quantize
+from repro.kernels import fxp_matmul, pofx_decode, pofx_matmul, quant_matmul
+from repro.kernels.ref import fxp_matmul_ref, pofx_decode_ref, pofx_matmul_ref
+from proptest import Floats, given
+
+RNG = np.random.default_rng(1234)
+
+DECODE_SHAPES = [(8, 8), (100, 100), (256, 512), (33, 257), (1, 128), (512, 64)]
+POSIT_CONFIGS = [(8, 2), (8, 0), (6, 1), (7, 3), (5, 0), (9, 2)]
+MM_SHAPES = [(16, 32, 24), (64, 200, 300), (128, 128, 128), (7, 65, 130), (1, 256, 16)]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("N,ES", POSIT_CONFIGS[:3])
+def test_pofx_decode_kernel_exact(shape, N, ES):
+    codes = jnp.asarray(RNG.integers(0, 1 << (N - 1), size=shape), dtype=jnp.uint8)
+    out = pofx_decode(codes, N, ES, 8, block=(64, 128))
+    ref = pofx_decode_ref(codes, N, ES, 8)
+    assert out.dtype == jnp.int8
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("N,ES", POSIT_CONFIGS)
+def test_pofx_decode_kernel_all_codes(N, ES):
+    """Every code value flows through the kernel identically to Algorithm 1."""
+    all_codes = np.arange(1 << (N - 1), dtype=np.uint8)
+    tile = np.tile(all_codes, (8, 2))  # 2D for BlockSpec
+    out = pofx_decode(jnp.asarray(tile), N, ES, 8, block=(8, 64))
+    ref = pofx_decode_ref(jnp.asarray(tile), N, ES, 8)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("mode", ["bitlevel", "onehot"])
+def test_pofx_matmul_kernel(m, k, n, mode):
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    codes = jnp.asarray(RNG.integers(0, 128, size=(k, n)), dtype=jnp.uint8)
+    scale = jnp.asarray((np.abs(RNG.standard_normal(n)) + 0.1).astype(np.float32))
+    y = pofx_matmul(x, codes, scale, 8, 2, 8, blocks=(32, 128, 64), decode_mode=mode)
+    ref = pofx_matmul_ref(x, codes, scale, 8, 2, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pofx_matmul_activation_dtypes(dtype):
+    x = jnp.asarray(RNG.standard_normal((32, 64)).astype(np.float32)).astype(dtype)
+    codes = jnp.asarray(RNG.integers(0, 128, size=(64, 48)), dtype=jnp.uint8)
+    scale = jnp.ones((48,), jnp.float32)
+    y = pofx_matmul(x, codes, scale, 8, 2, 8, blocks=(32, 48, 64))
+    ref = pofx_matmul_ref(x, codes, scale, 8, 2, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+def test_fxp_matmul_kernel_exact(m, k, n):
+    a = jnp.asarray(RNG.integers(-127, 128, size=(m, k)), dtype=jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, size=(k, n)), dtype=jnp.int8)
+    out = fxp_matmul(a, b, blocks=(32, 64, 32))
+    assert out.dtype == jnp.int32
+    assert np.array_equal(np.asarray(out), np.asarray(fxp_matmul_ref(a, b)))
+
+
+def test_fxp_matmul_accumulator_headroom():
+    """Worst-case accumulation must not overflow int32 (3M-bit argument)."""
+    k = 4096  # 127*127*4096 ~ 2^26*4096/64 ... = 6.6e7 << 2^31
+    a = jnp.full((8, k), 127, jnp.int8)
+    b = jnp.full((k, 8), 127, jnp.int8)
+    out = fxp_matmul(a, b, blocks=(8, 8, 512))
+    assert int(out[0, 0]) == 127 * 127 * k
+
+
+@given(seed=5, examples=10, x=Floats(lo=-2, hi=2, shape=(16, 96)))
+def test_property_quant_matmul_close_to_float(x):
+    """Property: pofx kernel matmul approximates the float matmul with error
+    bounded by the quantization error times activation norm."""
+    w = (np.random.default_rng(0).standard_normal((96, 32)) * 0.1).astype(np.float32)
+    xq = jnp.asarray(x.astype(np.float32))
+    qt = quantize(jnp.asarray(w), QuantSpec(kind="pofx", N=8, ES=2), axis=-1)
+    y_kernel = quant_matmul(xq, qt, use_kernel=True)
+    y_float = xq @ w
+    denom = np.maximum(np.abs(np.asarray(y_float)), 1.0)
+    rel = np.abs(np.asarray(y_kernel) - np.asarray(y_float)) / denom
+    assert rel.mean() < 0.05
+
+
+def test_quant_matmul_kernel_equals_xla_path():
+    x = jnp.asarray(RNG.standard_normal((10, 64)).astype(np.float32))
+    w = jnp.asarray((RNG.standard_normal((64, 80)) * 0.05).astype(np.float32))
+    qt = quantize(w, QuantSpec(kind="pofx", N=8, ES=2), axis=-1)
+    yk = quant_matmul(x, qt, use_kernel=True)
+    yx = quant_matmul(x, qt, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yx), rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_batched_leading_dims():
+    x = jnp.asarray(RNG.standard_normal((2, 3, 64)).astype(np.float32))
+    w = jnp.asarray((RNG.standard_normal((64, 32)) * 0.1).astype(np.float32))
+    qt = quantize(w, QuantSpec(kind="pofx", N=8, ES=2), axis=-1)
+    y = quant_matmul(x, qt, use_kernel=True)
+    assert y.shape == (2, 3, 32)

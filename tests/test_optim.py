@@ -1,0 +1,71 @@
+"""Optimizer: schedule shape, clipping, decay, posit8-moment parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (OptConfig, apply_updates, global_norm,
+                         init_opt_state, lr_schedule)
+
+
+def test_lr_schedule_warmup_and_cosine():
+    ocfg = OptConfig(learning_rate=1.0, warmup_steps=10, total_steps=110,
+                     min_lr_frac=0.1)
+    lrs = [float(lr_schedule(jnp.asarray(s), ocfg)) for s in range(0, 120, 5)]
+    assert lrs[1] < lrs[2] <= 1.0                 # warming up
+    assert abs(max(lrs) - 1.0) < 1e-5
+    assert abs(lrs[-1] - 0.1) < 1e-5              # floor at min_lr_frac
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4, 4))}
+    ocfg = OptConfig(learning_rate=1.0, warmup_steps=0, total_steps=10,
+                     grad_clip=1.0, weight_decay=0.0)
+    opt = init_opt_state(params)
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    new_p, opt, m = apply_updates(params, huge, opt, ocfg)
+    assert float(m["grad_norm"]) > 1e6
+    assert float(jnp.max(jnp.abs(new_p["w"]))) < 10.0
+
+
+def test_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    ocfg = OptConfig(learning_rate=0.1, warmup_steps=0, total_steps=10,
+                     weight_decay=0.5, grad_clip=0.0)
+    opt = init_opt_state(params)
+    zero = jax.tree.map(jnp.zeros_like, params)
+    new_p, _, _ = apply_updates(params, zero, opt, ocfg)
+    assert float(new_p["w"][0, 0]) < 1.0          # decayed
+    assert float(new_p["b"][0]) == 1.0            # not decayed
+
+
+def test_posit8_moments_track_fp32_closely():
+    """Same rosenbrock-ish descent with fp32 vs posit8 moments."""
+    def grads(p):
+        return {"w": 2 * p["w"] + 0.1 * jnp.sin(p["w"])}
+
+    hist = {}
+    for quant in ("none", "posit8"):
+        params = {"w": jnp.full((8, 8), 1.5)}
+        ocfg = OptConfig(learning_rate=0.05, warmup_steps=0, total_steps=100,
+                         weight_decay=0.0, quant=quant)
+        opt = init_opt_state(params, quant)
+        for _ in range(100):
+            params, opt, _ = apply_updates(params, grads(params), opt, ocfg)
+        hist[quant] = float(jnp.abs(params["w"]).max())
+    assert hist["posit8"] < 0.05
+    assert abs(hist["posit8"] - hist["none"]) < 0.02
+
+
+def test_posit8_moment_storage_is_uint8():
+    from repro.core.quantizers import QuantizedTensor
+    params = {"w": jnp.ones((16, 16))}
+    opt = init_opt_state(params, "posit8")
+    m = opt["m"]["w"]
+    assert isinstance(m, QuantizedTensor)
+    assert m.codes.dtype == jnp.uint8
+    assert m.codes.shape == (16, 16)
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": 2 * jnp.ones((4,))}
+    assert abs(float(global_norm(t)) - np.sqrt(3 + 16)) < 1e-6

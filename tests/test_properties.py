@@ -1,0 +1,141 @@
+"""Property-based tests (hypothesis) for the numeric-format core.
+
+System invariants the paper's correctness rests on:
+  * posit decode/encode are exact inverses on the code lattice,
+  * encode is round-to-nearest (no value maps to a farther code),
+  * normalized posit compress/expand is a bijection on the sub-unit lattice,
+  * PoFx(Algorithm 1) == arithmetic reference decode for every (N, ES, M),
+  * FxP quantization error <= half an ulp,
+  * monotonicity: posit codes order like the reals they represent,
+  * pack/unpack bit-streams are lossless,
+  * posit-compressed mean transport error is bounded by the lattice step.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fxp
+from repro.core.normalized_posit import (norm_compress, norm_decode_np,
+                                         norm_encode_np, norm_expand,
+                                         norm_max, pack_bits, unpack_bits)
+from repro.core.pofx import pofx_convert_np, pofx_normalized_np
+from repro.core.posit import (NAR, posit_decode_np, posit_encode_np,
+                              posit_value_table)
+
+config = st.tuples(st.integers(4, 10), st.integers(0, 3))
+
+
+@given(config)
+@settings(max_examples=40, deadline=None)
+def test_posit_roundtrip_is_identity(cfg):
+    N, ES = cfg
+    codes = np.arange(1 << N)
+    vals = posit_decode_np(codes, N, ES)
+    finite = codes[~np.isnan(vals)]
+    back = posit_encode_np(vals[~np.isnan(vals)], N, ES)
+    np.testing.assert_array_equal(back, finite)
+
+
+@given(config, st.lists(st.floats(-300, 300, allow_nan=False), min_size=1,
+                        max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_posit_encode_is_nearest(cfg, xs):
+    N, ES = cfg
+    x = np.asarray(xs)
+    codes = posit_encode_np(x, N, ES)
+    got = posit_decode_np(codes, N, ES)
+    table = posit_value_table(N, ES)
+    full = np.concatenate([-table[::-1], table])
+    for xi, gi in zip(x, got):
+        best = full[np.argmin(np.abs(full - xi))]
+        assert abs(gi - xi) <= abs(best - xi) + 1e-12 * max(abs(xi), 1)
+
+
+@given(config)
+@settings(max_examples=40, deadline=None)
+def test_normalized_bijection(cfg):
+    N, ES = cfg
+    codes = np.arange(1 << (N - 1))
+    assert np.array_equal(norm_compress(norm_expand(codes, N), N), codes)
+    vals = norm_decode_np(codes, N, ES)
+    assert np.all(np.abs(vals) <= 1.0)
+
+
+@given(config, st.integers(6, 16))
+@settings(max_examples=40, deadline=None)
+def test_pofx_matches_arithmetic_decode(cfg, M):
+    """Algorithm 1's bit-level output == round(value * 2^F) truncated."""
+    N, ES = cfg
+    codes = np.arange(1 << (N - 1))
+    fxp_codes, of = pofx_normalized_np(codes, N, ES, M)
+    vals = norm_decode_np(codes, N, ES)
+    F = M - 1
+    expect = np.trunc(vals * (1 << F))  # stage D truncates toward zero
+    expect = np.clip(expect, -(2 ** (M - 1) - 1), 2 ** (M - 1) - 1)
+    np.testing.assert_array_equal(fxp_codes, expect.astype(np.int64))
+
+
+@given(st.integers(4, 12), st.integers(0, 3),
+       st.lists(st.floats(-0.999, 0.999), min_size=1, max_size=32))
+@settings(max_examples=40, deadline=None)
+def test_norm_encode_error_bounded_by_lattice_gap(N, ES, xs):
+    x = np.asarray(xs)
+    codes = norm_encode_np(x, N, ES)
+    back = norm_decode_np(codes, N, ES)
+    # error bounded by the largest gap between adjacent normalized codes
+    grid = norm_decode_np(np.arange(1 << (N - 1)), N, ES)
+    grid = np.sort(grid)
+    gap = np.max(np.diff(grid))
+    assert np.max(np.abs(back - np.clip(x, -1, norm_max(N, ES)))) <= gap
+
+
+@given(st.integers(4, 16), st.integers(2, 200))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_lossless(k, n):
+    rng = np.random.default_rng(n)
+    codes = rng.integers(0, 1 << k, size=n).astype(np.int64)
+    packed = pack_bits(codes, k)
+    assert packed.nbytes <= (n * k + 7) // 8 + 1
+    out = unpack_bits(packed, k, n)
+    np.testing.assert_array_equal(out, codes)
+
+
+@given(st.integers(3, 15),
+       st.lists(st.floats(-100, 100), min_size=1, max_size=32))
+@settings(max_examples=40, deadline=None)
+def test_fxp_half_ulp(M, xs):
+    F = M - 1
+    x = np.asarray(xs) / 128.0
+    codes = fxp.fxp_quantize_np(x, M, F)
+    back = fxp.fxp_dequantize_np(codes, F)
+    ulp = 2.0 ** -F
+    in_range = np.abs(x) < (2 ** (M - 1) - 1) * ulp
+    assert np.all(np.abs(back[in_range] - x[in_range]) <= ulp / 2 + 1e-12)
+
+
+@given(config)
+@settings(max_examples=30, deadline=None)
+def test_posit_monotonic_in_signed_code_order(cfg):
+    N, ES = cfg
+    codes = np.arange(1 << N)
+    vals = posit_decode_np(codes, N, ES)
+    signed = np.where(codes >= (1 << (N - 1)), codes - (1 << N), codes)
+    order = np.argsort(signed)
+    v = vals[order]
+    v = v[~np.isnan(v)]
+    assert np.all(np.diff(v) > 0)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_compressed_mean_bounded(seed):
+    """Transport error of the posit8 gradient codec stays within the
+    normalized-lattice gap times the pow2 scale."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=64).astype(np.float64) * 10.0 ** rng.integers(-6, 2)
+    amax = np.max(np.abs(g)) or 1.0
+    scale = 2.0 ** np.ceil(np.log2(amax))
+    codes = norm_encode_np(g / scale, 8, 2)
+    back = norm_decode_np(codes, 8, 2) * scale
+    grid = np.sort(norm_decode_np(np.arange(1 << 7), 8, 2))
+    gap = np.max(np.diff(grid)) * scale
+    assert np.max(np.abs(back - g)) <= gap + 1e-12
