@@ -9,51 +9,39 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fxp
-from repro.core.pofx import pofx_normalized
-from repro.core.posit import posit_decode
-from repro.core.quantizers import QuantSpec, quantize, storage_bits
+from repro.core.analysis import spec_name
+from repro.core.policy import parse_spec
+from repro.core.quantizers import quantize, storage_bits
 
-from .common import (avg_abs_rel_error, jaxpr_ops, vgg_like_weights,
-                     wall_time, write_csv)
+from .common import (avg_abs_rel_error, decode_fn, jaxpr_ops,
+                     vgg_like_weights, wall_time, write_csv)
+
+# per-tensor pow2 normalizer (@tensor): the paper's "normalized parameters"
+# assumption (one scale per tensor, negligible overhead)
+SPEC_STRINGS = ("fp32", "bf16", "fxp8@tensor", "fxp16@tensor",
+                "posit8es2@tensor", "posit6es2@tensor",
+                "pofx8es2@tensor", "pofx6es2@tensor")
 
 
-def run():
+def run(extra_specs=()):
     w = vgg_like_weights(1 << 18)
     rows = []
-    specs = [
-        ("fp32", QuantSpec(kind="fp32")),
-        ("bf16", QuantSpec(kind="bf16")),
-        ("fxp8", QuantSpec(kind="fxp", M=8, F=7)),
-        ("fxp16", QuantSpec(kind="fxp", M=16, F=15)),
-        ("posit(8,2)", QuantSpec(kind="posit", N=8, ES=2)),
-        ("posit(6,2)", QuantSpec(kind="posit", N=6, ES=2)),
-        ("pofx(7,2)", QuantSpec(kind="pofx", N=8, ES=2, M=8)),
-        ("pofx(5,2)", QuantSpec(kind="pofx", N=6, ES=2, M=8)),
-    ]
+    # extra specs get the same per-tensor normalizer unless one is named
+    # explicitly — this bench's weight buffer is 1-D, where the default
+    # channel scale degenerates to one fp32 scale per weight.
+    extras = tuple(s if "@" in s else s + "@tensor" for s in extra_specs)
+    specs = [parse_spec(s) for s in (*SPEC_STRINGS, *extras)]
     codes8 = jnp.asarray(np.random.default_rng(0).integers(0, 128, 1 << 18),
                          jnp.int32)
-    decoders = {
-        "fxp8": lambda c: fxp.fxp_dequantize(c, 7),
-        "fxp16": lambda c: fxp.fxp_dequantize(c, 15),
-        "posit(8,2)": lambda c: posit_decode(c, 8, 2),
-        "posit(6,2)": lambda c: posit_decode(c, 6, 2),
-        "pofx(7,2)": lambda c: pofx_normalized(c, 8, 2, 8)[0],
-        "pofx(5,2)": lambda c: pofx_normalized(c, 6, 2, 8)[0],
-    }
-    for name, spec in specs:
-        # per-tensor pow2 normalizer: the paper's "normalized parameters"
-        # assumption (one scale per tensor, negligible overhead)
-        import dataclasses
-        if spec.kind not in ("fp32", "bf16"):
-            spec = dataclasses.replace(spec, scale_mode="tensor_pow2")
+    for spec in specs:
+        name = spec_name(spec)
         qt = quantize(jnp.asarray(w, jnp.float32), spec)
         wq = np.asarray(qt.dequantize(jnp.float32), np.float64)
         row = {"scheme": name,
                "avg_rel": avg_abs_rel_error(w, wq),
                "bits_per_weight": storage_bits(qt) / w.size}
-        if name in decoders:
-            fn = decoders[name]
+        fn = decode_fn(spec)
+        if fn is not None:
             row["decode_ops"] = jaxpr_ops(fn, codes8)
             row["decode_ns_per_weight"] = wall_time(fn, codes8) / codes8.size * 1e9
         else:
@@ -64,7 +52,7 @@ def run():
     by = {r["scheme"]: r for r in rows}
     return rows, {
         # paper Fig 2: posit decode much deeper than fxp; pofx storage wins
-        "pofx7_bits": by["pofx(7,2)"]["bits_per_weight"],
+        "pofx7_bits": by["pofx(7,2,via_fxp)"]["bits_per_weight"],
         "fxp8_bits": by["fxp8"]["bits_per_weight"],
         "posit_decode_deeper_than_fxp":
             by["posit(8,2)"]["decode_ops"] > by["fxp8"]["decode_ops"],

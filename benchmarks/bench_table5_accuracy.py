@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analysis import spec_name
-from repro.core.quantizers import QuantSpec, dequantize, quantize
+from repro.core.policy import parse_spec
+from repro.core.quantizers import dequantize, quantize
 
 from .common import write_csv
 
@@ -64,7 +65,7 @@ def _accuracy(fwd, params, x, y) -> float:
     return float(jnp.mean(pred == y))
 
 
-def run():
+def run(extra_specs=()):
     x, y = _task()
     n_tr = 3072
     params, fwd = _train_mlp(x[:n_tr], y[:n_tr], 10)
@@ -77,18 +78,13 @@ def run():
         return _accuracy(fwd, qp, xte, yte)
 
     rows = [{"config": "fp32", "accuracy": base_acc, "drop": 0.0}]
-    specs = [QuantSpec(kind="fxp", M=16, F=15),
-             QuantSpec(kind="fxp", M=8, F=7),
-             QuantSpec(kind="fxp", M=7, F=6),
-             QuantSpec(kind="fxp", M=4, F=3)]
-    for N in (6, 7, 8):
-        for ES in (1, 2, 3):
-            specs.append(QuantSpec(kind="posit", N=N, ES=ES))
+    spec_strings = ["fxp16", "fxp8", "fxp7", "fxp4"]
+    spec_strings += [f"posit{N}es{ES}" for N in (6, 7, 8) for ES in (1, 2, 3)]
     for N in (6, 7, 8):
         for ES in (1, 2):
-            specs.append(QuantSpec(kind="pofx", N=N, ES=ES, M=8, path="direct"))
-            specs.append(QuantSpec(kind="pofx", N=N, ES=ES, M=8, path="via_fxp"))
-    for spec in specs:
+            spec_strings += [f"pofx{N}es{ES}-direct", f"pofx{N}es{ES}"]
+    spec_strings += list(extra_specs)
+    for spec in map(parse_spec, spec_strings):
         name = spec_name(spec)
         acc = quantized_acc(spec)
         rows.append({"config": name, "accuracy": acc,
@@ -110,7 +106,7 @@ def run():
     # strengthens the technique.
     werr = {}
     for path in ("direct", "via_fxp"):
-        spec = QuantSpec(kind="pofx", N=7, ES=2, M=8, path=path)
+        spec = parse_spec("pofx7es2-direct" if path == "direct" else "pofx7es2")
         errs = []
         for v in params.values():
             wq = dequantize(quantize(v, spec, axis=-1), jnp.float32)

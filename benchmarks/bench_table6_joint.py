@@ -10,18 +10,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pofx import pofx_normalized
-from repro.core.posit import posit_decode
-from repro.core import fxp as fxp_mod
-from repro.core.quantizers import QuantSpec, quantize, storage_bits
+from repro.core.policy import parse_spec
+from repro.core.quantizers import quantize, storage_bits
 from repro.core.analysis import spec_name
 
-from .common import jaxpr_ops, vgg_like_weights, write_csv
+from .common import decode_fn, jaxpr_ops, vgg_like_weights, write_csv
 from . import bench_table5_accuracy as t5
 
 
-def run():
-    acc_rows, _ = t5.run()
+def run(extra_specs=()):
+    acc_rows, _ = t5.run(extra_specs=extra_specs)
     acc = {r["config"]: r["accuracy"] for r in acc_rows}
     w = vgg_like_weights(1 << 14)
     codes = jnp.asarray(np.arange(4096) % 32, jnp.int32)
@@ -29,28 +27,20 @@ def run():
 
     def cost(spec):
         import dataclasses
+        # per-tensor pow2 normalizer for the cost model (paper assumption)
         if spec.kind not in ("fp32", "bf16"):
             spec = dataclasses.replace(spec, scale_mode="tensor_pow2")
         qt = quantize(jnp.asarray(w, jnp.float32), spec)
         bits = storage_bits(qt) / w.size
-        if spec.kind == "fxp":
-            ops = jaxpr_ops(lambda c: fxp_mod.fxp_dequantize(c, spec.F), codes)
-        elif spec.kind == "posit":
-            ops = jaxpr_ops(lambda c: posit_decode(c, spec.N, spec.ES), codes)
-        else:
-            ops = jaxpr_ops(lambda c: pofx_normalized(c, spec.N, spec.ES,
-                                                      spec.M)[0], codes)
+        fn = decode_fn(spec)
+        ops = jaxpr_ops(fn, codes) if fn is not None else 0
         return bits, ops
 
-    table = [QuantSpec(kind="fxp", M=16, F=15), QuantSpec(kind="fxp", M=8, F=7)]
-    for N in (7, 8):
-        for ES in (1, 2, 3):
-            table.append(QuantSpec(kind="posit", N=N, ES=ES))
-    for N in (6, 7, 8):
-        for ES in (1, 2):
-            table.append(QuantSpec(kind="pofx", N=N, ES=ES, M=8,
-                                   path="via_fxp"))
-    for spec in table:
+    spec_strings = ["fxp16", "fxp8"]
+    spec_strings += [f"posit{N}es{ES}" for N in (7, 8) for ES in (1, 2, 3)]
+    spec_strings += [f"pofx{N}es{ES}" for N in (6, 7, 8) for ES in (1, 2)]
+    spec_strings += list(extra_specs)
+    for spec in map(parse_spec, spec_strings):
         name = spec_name(spec)
         bits, ops = cost(spec)
         rows.append({"config": name, "accuracy": acc.get(name, float("nan")),

@@ -41,6 +41,23 @@ def jaxpr_ops(fn, *args) -> int:
     return sum(1 for _ in jaxpr.jaxpr.eqns)
 
 
+def decode_fn(spec):
+    """Storage-code -> value decode lambda for one QuantSpec kind (the
+    bit-level datapath the CPD/op-count probes measure); None for float
+    passthrough kinds."""
+    from repro.core import fxp as fxp_mod
+    from repro.core.pofx import pofx_normalized
+    from repro.core.posit import posit_decode
+
+    if spec.kind == "fxp":
+        return lambda c: fxp_mod.fxp_dequantize(c, spec.F)
+    if spec.kind == "posit":
+        return lambda c: posit_decode(c, spec.N, spec.ES)
+    if spec.kind == "pofx":
+        return lambda c: pofx_normalized(c, spec.N, spec.ES, spec.M)[0]
+    return None
+
+
 def write_csv(name: str, rows: List[Dict]) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.csv")

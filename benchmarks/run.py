@@ -1,14 +1,18 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1,table5,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table5,...] \
+        [--quant pofx5es1,fxp6]
 
 Each bench returns (rows, claims). Rows land in experiments/bench/*.csv;
 the claims dict is printed as ``bench,claim,value`` lines — EXPERIMENTS.md
-§Claims is generated from this output.
+§Claims is generated from this output. ``--quant`` (the shared policy/spec
+grammar, see repro.core.policy) appends extra comma-separated spec strings
+to every format-sweeping bench that accepts them.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -28,11 +32,20 @@ BENCHES = [
 
 
 def main(argv=None) -> int:
+    from repro.core.policy import add_policy_arg, parse_spec
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench name substrings")
+    add_policy_arg(ap, default="",
+                   extra_help="extra spec strings appended to the "
+                              "format-sweeping benches")
     args = ap.parse_args(argv)
     only = [s for s in args.only.split(",") if s]
+    extra_specs = tuple(s for s in args.quant.split(",") if s)
+    for s in extra_specs:
+        if parse_spec(s) is None:  # fail fast on typos / the keep sentinel
+            raise SystemExit(f"--quant: {s!r} is not a quantized format")
     failures = []
     for name, module in BENCHES:
         if only and not any(s in name for s in only):
@@ -40,7 +53,10 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
-            rows, claims = mod.run()
+            kwargs = {}
+            if "extra_specs" in inspect.signature(mod.run).parameters:
+                kwargs["extra_specs"] = extra_specs
+            rows, claims = mod.run(**kwargs)
             dt = time.time() - t0
             print(f"=== {name}: {len(rows)} rows in {dt:.1f}s")
             for k, v in claims.items():

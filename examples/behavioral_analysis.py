@@ -15,9 +15,10 @@ import numpy as np
 
 from repro.configs import ARCHS, RunConfig, smoke
 from repro.core.analysis import default_spec_grid, spec_name, sweep_configs
+from repro.core.policy import policy_from_pareto, storage_report
 from repro.data import DataConfig, synthetic_batch
 from repro.launch.train import make_train_state, make_train_step
-from repro.nn.models import build_model, ce_loss, quantize_params
+from repro.nn.models import apply_policy, build_model, ce_loss, quantize_params
 
 
 def main():
@@ -76,6 +77,21 @@ def main():
     for b in sorted(best):
         print(f"  {b:2d} bits/weight -> {best[b][0]:<22} "
               f"eval_nll={-best[b][1]:.4f}")
+
+    # format search -> QuantPolicy: per layer group, pick the cheapest
+    # Pareto-front format meeting the error budget (Table 6 methodology).
+    groups = {
+        "attn/*": [weights["wq"], weights["wo"]],
+        "mlp/*": [weights["wg"]],
+        "*embed*": [weights["unembed"]],
+    }
+    policy = policy_from_pareto(groups, max_avg_rel=0.05, fallback="pofx8es2")
+    print(f"\npareto-derived policy: {policy.to_string()}")
+    qp = apply_policy(params, policy)
+    print(storage_report(qp, policy))
+    logits = model.forward(qp, jnp.asarray(eval_batch["tokens"]))
+    nll = float(ce_loss(logits, jnp.asarray(eval_batch["labels"])))
+    print(f"eval_nll under pareto policy: {nll:.4f}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantizers import QuantSpec, quantize, storage_bits
+from repro.core.policy import parse_spec
+from repro.core.quantizers import quantize, storage_bits
 from repro.kernels.ops import quant_matmul
 
 rng = np.random.default_rng(0)
@@ -21,19 +22,14 @@ x = jnp.asarray(rng.normal(0, 1.0, (8, 512)), jnp.float32)
 y_ref = x @ w
 
 print(f"{'format':<14} {'bits/w':>7} {'storage':>10} {'matmul rel err':>15}")
-for name, spec in [
-    ("fxp8", QuantSpec(kind="fxp", M=8, F=7)),
-    ("posit(8,2)", QuantSpec(kind="posit", N=8, ES=2)),
-    ("pofx(7,2)", QuantSpec(kind="pofx", N=8, ES=2, M=8)),   # the paper
-    ("pofx(5,2)", QuantSpec(kind="pofx", N=6, ES=2, M=8)),
-]:
-    qt = quantize(w, spec, axis=-1)
+for name in ["fxp8", "posit8es2", "pofx8es2", "pofx6es2"]:   # pofx8es2: paper
+    qt = quantize(w, parse_spec(name), axis=-1)
     y = quant_matmul(x, qt, out_dtype=jnp.float32)
     rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
     bits = storage_bits(qt) / w.size
     print(f"{name:<14} {bits:7.2f} {storage_bits(qt)/8/1024:8.1f}KiB {rel:15.5f}")
 
 # the same QuantizedTensor flows through jit / scan / checkpointing:
-qt = quantize(w, QuantSpec(kind="pofx", N=8, ES=2, M=8), axis=-1)
+qt = quantize(w, parse_spec("pofx8es2"), axis=-1)
 fast = jax.jit(lambda x, q: quant_matmul(x, q))
 print("jit ok:", fast(x, qt).shape, "codes dtype:", qt.codes.dtype)

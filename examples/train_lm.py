@@ -19,10 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, RunConfig, smoke
-from repro.core.quantizers import QuantSpec
+from repro.core.policy import QuantPolicy, storage_report
 from repro.data import DataConfig, synthetic_batch
 from repro.launch.train import make_train_state, make_train_step
-from repro.nn.models import build_model, ce_loss, quantize_params
+from repro.nn.models import apply_policy, build_model, ce_loss
 from repro.runtime import CheckpointManager, StepTimeMonitor
 
 
@@ -92,14 +92,22 @@ def main():
         return float(np.exp(tot / len(eval_batches)))
 
     base_ppl = ppl(params)
-    print(f"\n{'format':<12} {'perplexity':>11} {'vs fp32':>9}")
-    print(f"{'fp32':<12} {base_ppl:11.3f} {'-':>9}")
-    for name, spec in [("pofx(7,2)", QuantSpec(kind="pofx", N=8, ES=2, M=8)),
-                       ("pofx(5,2)", QuantSpec(kind="pofx", N=6, ES=2, M=8)),
-                       ("fxp8", QuantSpec(kind="fxp", M=8, F=7))]:
-        qp = quantize_params(params, spec)
+    print(f"\n{'policy':<28} {'perplexity':>11} {'vs fp32':>9}")
+    print(f"{'fp32':<28} {base_ppl:11.3f} {'-':>9}")
+    for pol_s in ["pofx8es2", "pofx6es2", "fxp8f7",
+                  "attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16"]:
+        qp = apply_policy(params, pol_s)
         p = ppl(qp)
-        print(f"{name:<12} {p:11.3f} {p/base_ppl:8.3f}x")
+        print(f"{pol_s:<28} {p:11.3f} {p/base_ppl:8.3f}x")
+
+    # quantized checkpoint round-trip: codes + policy metadata at rest
+    policy = QuantPolicy.from_string("paper-table6")
+    qp = apply_policy(params, policy)
+    qm = CheckpointManager(args.ckpt_dir + "_quant", keep=1, async_save=False)
+    qm.save(args.steps - 1, {"params": qp}, policy=policy)
+    print(f"\nsaved quantized checkpoint "
+          f"(policy={qm.read_manifest()['quant_policy']}):")
+    print(storage_report(qm.restore()["params"], policy))
 
 
 if __name__ == "__main__":

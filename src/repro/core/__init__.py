@@ -50,3 +50,12 @@ from .quantizers import (  # noqa: F401
     storage_bits,
 )
 from .pareto import hypervolume, hypervolume_gain, pareto_front, pareto_mask  # noqa: F401
+from .policy import (  # noqa: F401
+    PRESETS,
+    QuantPolicy,
+    add_policy_arg,
+    format_spec,
+    parse_spec,
+    policy_from_pareto,
+    storage_report,
+)

@@ -1,0 +1,342 @@
+"""QuantPolicy — per-layer mixed-precision quantization with one spec grammar.
+
+The paper's headline savings come from *choosing formats per tensor class*
+(Table 6), not from one global format. This module is the single
+configuration surface for that choice:
+
+Spec-string grammar (``parse_spec`` / ``format_spec``, DESIGN.md §3):
+
+    fp32 | bf16                       passthrough baselines
+    fxp{M}[f{F}]                      FxP(M, F); F defaults to M-1
+    posit{N}[es{ES}]                  Posit(N, ES); ES defaults to 2
+    pofx{N}[es{ES}][m{M}][-direct]    the paper's format: normalized
+                                      Posit(N-1, ES) storage, FxP(M, M-1)
+                                      compute; M defaults to 8, path to
+                                      via_fxp ("-viafxp")
+    keep                              leave the tensor untouched
+
+    optional scale suffix on any quantized kind:
+        @channel (default) | @tensor | @none   -> scale_mode
+
+Policy grammar (``QuantPolicy.from_string``):
+
+    "pofx8es2"                                   uniform (sugar for "*=...")
+    "attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16"        ordered (glob -> spec) rules
+    "paper-table6"                               named preset (PRESETS)
+
+Rules match parameter pytree paths ("/"-joined dict keys, e.g.
+"blocks/attn/wq"); the first matching rule wins and a pattern is anchored at
+a path-segment boundary (pattern "attn/*" behaves like "**/attn/*"). Tensor
+classes on the never-quantize list (norms, SSM recurrence, routers — see
+DESIGN.md §5) are excluded *before* rule matching and cannot be quantized by
+any rule.
+
+``apply_policy`` itself lives in ``repro.nn.models`` (it owns the
+stacked-block layout); everything format-related is here so core stays free
+of nn imports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .quantizers import QuantSpec, QuantizedTensor, storage_bits
+
+__all__ = [
+    "parse_spec",
+    "format_spec",
+    "QuantPolicy",
+    "PRESETS",
+    "storage_report",
+    "policy_from_pareto",
+    "add_policy_arg",
+]
+
+_SCALE_TOKENS = {"channel": "channel_pow2", "tensor": "tensor_pow2",
+                 "none": "none"}
+_SCALE_NAMES = {v: k for k, v in _SCALE_TOKENS.items()}
+
+_FXP_RE = re.compile(r"^fxp(\d+)(?:f(\d+))?$")
+_POSIT_RE = re.compile(r"^posit(\d+)(?:es(\d+))?$")
+_POFX_RE = re.compile(r"^pofx(\d+)(?:es(\d+))?(?:m(\d+))?(?:-(direct|viafxp))?$")
+
+GRAMMAR_HELP = (
+    "spec grammar: fp32 | bf16 | fxp{M}[f{F}] | posit{N}[es{ES}] | "
+    "pofx{N}[es{ES}][m{M}][-direct] | keep, each with optional "
+    "@channel|@tensor|@none scale suffix; policy grammar: one spec "
+    "(uniform) or comma-separated glob=spec rules matched first-wins "
+    "against parameter paths (e.g. 'attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16'), "
+    "or a preset name (%s)"
+)
+
+
+def parse_spec(s: str) -> Optional[QuantSpec]:
+    """Parse one spec string; returns None for the "keep" sentinel."""
+    tok = s.strip().lower()
+    if tok in ("keep", "skip"):
+        return None
+    scale_mode = None
+    if "@" in tok:
+        tok, _, sm = tok.partition("@")
+        if sm not in _SCALE_TOKENS:
+            raise ValueError(
+                f"unknown scale mode {sm!r} in spec {s!r} "
+                f"(expected one of {sorted(_SCALE_TOKENS)})")
+        scale_mode = _SCALE_TOKENS[sm]
+    if tok in ("fp32", "f32", "float32"):
+        return QuantSpec(kind="fp32")
+    if tok in ("bf16", "bfloat16"):
+        return QuantSpec(kind="bf16")
+    kw = {} if scale_mode is None else {"scale_mode": scale_mode}
+    m = _FXP_RE.match(tok)
+    if m:
+        M = int(m.group(1))
+        F = int(m.group(2)) if m.group(2) else M - 1
+        return QuantSpec(kind="fxp", M=M, F=F, **kw)
+    m = _POSIT_RE.match(tok)
+    if m:
+        N = int(m.group(1))
+        ES = int(m.group(2)) if m.group(2) else 2
+        return QuantSpec(kind="posit", N=N, ES=ES, **kw)
+    m = _POFX_RE.match(tok)
+    if m:
+        N = int(m.group(1))
+        ES = int(m.group(2)) if m.group(2) else 2
+        M = int(m.group(3)) if m.group(3) else 8
+        path = "direct" if m.group(4) == "direct" else "via_fxp"
+        return QuantSpec(kind="pofx", N=N, ES=ES, M=M, path=path, **kw)
+    raise ValueError(f"cannot parse quant spec {s!r} ({GRAMMAR_HELP % '...'})")
+
+
+def format_spec(spec: Optional[QuantSpec]) -> str:
+    """Canonical spec string; ``parse_spec(format_spec(s)) == s`` for every
+    spec expressible in the grammar (kind/N/ES/M/F/path/scale_mode)."""
+    if spec is None:
+        return "keep"
+    if spec.kind in ("fp32", "bf16"):
+        return spec.kind
+    if spec.kind == "fxp":
+        out = f"fxp{spec.M}" + (f"f{spec.F}" if spec.F != spec.M - 1 else "")
+    elif spec.kind == "posit":
+        out = f"posit{spec.N}es{spec.ES}"
+    else:  # pofx
+        out = f"pofx{spec.N}es{spec.ES}"
+        if spec.M != 8:
+            out += f"m{spec.M}"
+        if spec.path == "direct":
+            out += "-direct"
+    if spec.scale_mode != "channel_pow2":
+        out += "@" + _SCALE_NAMES.get(spec.scale_mode, spec.scale_mode)
+    return out
+
+
+def _match_one(pattern: str, name: str) -> bool:
+    """Glob match anchored at a path-segment boundary ("attn/*" behaves as
+    "**/attn/*"; "embed" matches the top-level leaf only)."""
+    return (fnmatch.fnmatchcase(name, pattern)
+            or fnmatch.fnmatchcase(name, "*/" + pattern))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Ordered (path-glob -> QuantSpec) rules; first match wins.
+
+    A spec of None ("keep") leaves matching tensors untouched. Paths that
+    match no rule are also left untouched, so a trailing "*" rule is the
+    uniform fallback.
+    """
+    rules: Tuple[Tuple[str, Optional[QuantSpec]], ...]
+
+    @classmethod
+    def uniform(cls, spec) -> "QuantPolicy":
+        if isinstance(spec, str):
+            spec = parse_spec(spec)
+        return cls(rules=(("*", spec),))
+
+    @classmethod
+    def from_string(cls, s: str) -> "QuantPolicy":
+        text = s.strip()
+        if text in PRESETS:
+            text = PRESETS[text]
+        rules: List[Tuple[str, Optional[QuantSpec]]] = []
+        for part in text.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" in part:
+                pat, _, spec_s = part.partition("=")
+                rules.append((pat.strip(), parse_spec(spec_s)))
+            else:
+                # bare spec: uniform sugar, equivalent to "*=<spec>"
+                rules.append(("*", parse_spec(part)))
+        if not rules:
+            raise ValueError(f"empty quant policy {s!r}")
+        return cls(rules=tuple(rules))
+
+    def to_string(self) -> str:
+        if len(self.rules) == 1 and self.rules[0][0] == "*":
+            return format_spec(self.rules[0][1])
+        return ",".join(f"{pat}={format_spec(spec)}"
+                        for pat, spec in self.rules)
+
+    def match_rule(self, name: str) -> Optional[Tuple[str, Optional[QuantSpec]]]:
+        """First (pattern, spec) rule matching a "/"-joined parameter path."""
+        for pat, spec in self.rules:
+            if _match_one(pat, name):
+                return (pat, spec)
+        return None
+
+    def match(self, name: str) -> Optional[QuantSpec]:
+        rule = self.match_rule(name)
+        return rule[1] if rule else None
+
+
+# Named presets — resolved by QuantPolicy.from_string. "paper-table6" is the
+# paper's winning deployment point (Table 6: PoFx(7,2) storage everywhere the
+# datapath allows) with the error-sensitive embedding tables kept bf16, the
+# per-layer mixing Langroudi/Gohil motivate.
+PRESETS: Dict[str, str] = {
+    "uniform-pofx8": "*=pofx8es2",
+    "uniform-fxp8": "*=fxp8f7",
+    "uniform-posit8": "*=posit8es2",
+    "paper-table6": "embed=bf16,unembed=bf16,*=pofx8es2",
+}
+
+
+# ---------------------------------------------------------------------------
+# Policy-aware storage report (the paper's Table 6 storage rows, per rule)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_entries(params):
+    """(path-name, leaf) pairs with QuantizedTensor treated as one leaf."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
+    out = []
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        out.append(("/".join(names), leaf))
+    return out
+
+
+def _leaf_stats(leaf) -> Tuple[int, int, str]:
+    """(param count, stored bits, format label) for one leaf."""
+    if isinstance(leaf, QuantizedTensor):
+        n = int(np.prod(leaf.codes.shape)) if leaf.codes.ndim else 1
+        return n, storage_bits(leaf), format_spec(leaf.spec)
+    n = int(leaf.size)
+    return n, n * leaf.dtype.itemsize * 8, str(leaf.dtype)
+
+
+def storage_report(params, policy: Optional[QuantPolicy] = None) -> str:
+    """Per-rule parameter-storage breakdown plus the total footprint.
+
+    With a policy, leaves are grouped by the rule that claimed them
+    (unmatched / never-quant leaves land in "(unmatched)"); without one,
+    they are grouped by their storage format.
+    """
+    groups: Dict[str, List[Tuple[int, int]]] = {}
+    fmt_by_group: Dict[str, set] = {}
+    total_bits = 0
+    total_n = 0
+    for name, leaf in _leaf_entries(params):
+        n, bits, fmt = _leaf_stats(leaf)
+        if policy is not None:
+            rule = policy.match_rule(name)
+            key = f"{rule[0]}={format_spec(rule[1])}" if rule else "(unmatched)"
+        else:
+            key = fmt
+        groups.setdefault(key, []).append((n, bits))
+        fmt_by_group.setdefault(key, set()).add(fmt)
+        total_bits += bits
+        total_n += n
+    lines = []
+    for key, entries in sorted(groups.items(), key=lambda kv: -sum(
+            b for _, b in kv[1])):
+        n = sum(e[0] for e in entries)
+        bits = sum(e[1] for e in entries)
+        stored = ",".join(sorted(fmt_by_group[key]))
+        lines.append(f"  {key:<28} {n/1e6:9.2f}M params  "
+                     f"{bits/8/2**20:9.2f}MiB  {bits/max(n,1):5.2f} b/w  "
+                     f"[{stored}]")
+    bpw = total_bits / max(total_n, 1)
+    lines.append(f"  {'TOTAL':<28} {total_n/1e6:9.2f}M params  "
+                 f"{total_bits/8/2**20:9.2f}MiB  {bpw:5.2f} b/w  "
+                 f"(vs fp32 {32/bpw:.1f}x, vs bf16 {16/bpw:.1f}x smaller)")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Analysis-driven policy search (Fig. 8 / Tables 3-4 machinery -> a policy)
+# ---------------------------------------------------------------------------
+
+
+def policy_from_pareto(
+    group_weights: Mapping[str, Sequence],
+    candidates: Optional[Sequence[QuantSpec]] = None,
+    *,
+    max_avg_rel: float = 0.05,
+    fallback: str = "bf16",
+) -> QuantPolicy:
+    """Pick one format per layer group from its (error, storage) Pareto front.
+
+    group_weights: ordered {path-glob: [weight arrays]} — e.g.
+        {"attn/*": [...], "mlp/*": [...]} sampled from the model.
+    candidates: QuantSpecs to sweep (default: core.analysis grid, via_fxp
+        paths only — the deployable ones per Table 5).
+    For each group, candidates are reduced to their Pareto front over
+    (avg relative weight error, stored bits/weight); the chosen spec is the
+    cheapest front member with error <= max_avg_rel, else the most accurate
+    front member. A trailing "*"=fallback rule completes the policy.
+    """
+    from .analysis import default_spec_grid, weight_error
+    from .pareto import pareto_mask
+
+    if candidates is None:
+        candidates = [s for s in default_spec_grid(include_paths=False)
+                      if s.kind != "posit" or s.N >= 6]
+    rules: List[Tuple[str, Optional[QuantSpec]]] = []
+    for pattern, weights in group_weights.items():
+        pts = []
+        for spec in candidates:
+            errs, bits, count = [], 0, 0
+            for w in weights:
+                e = weight_error(w, spec, axis=-1)
+                errs.append(e["avg_rel"])
+                bits += e["bits"]
+                count += int(np.prod(np.shape(w)))
+            pts.append((float(np.mean(errs)), bits / max(count, 1)))
+        pts_arr = np.asarray(pts)
+        front_idx = np.nonzero(pareto_mask(pts_arr))[0]
+        ok = [i for i in front_idx if pts_arr[i, 0] <= max_avg_rel]
+        if ok:
+            pick = min(ok, key=lambda i: (pts_arr[i, 1], pts_arr[i, 0]))
+        else:
+            pick = min(front_idx, key=lambda i: (pts_arr[i, 0], pts_arr[i, 1]))
+        rules.append((pattern, candidates[pick]))
+    rules.append(("*", parse_spec(fallback)))
+    return QuantPolicy(rules=tuple(rules))
+
+
+# ---------------------------------------------------------------------------
+# Shared CLI path — every driver registers --quant through here
+# ---------------------------------------------------------------------------
+
+
+def add_policy_arg(parser, default: str = "pofx8es2", flag: str = "--quant",
+                   extra_help: str = "") -> None:
+    """Register the shared quantization-policy CLI argument.
+
+    The value is a policy string (parse with ``QuantPolicy.from_string``);
+    drivers with sentinel values ("auto") check those before parsing.
+    """
+    help_text = GRAMMAR_HELP % ", ".join(sorted(PRESETS))
+    if extra_help:
+        help_text = f"{extra_help}; {help_text}"
+    parser.add_argument(flag, default=default, help=help_text)

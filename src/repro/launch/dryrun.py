@@ -59,7 +59,9 @@ TRAIN_KNOBS: Dict[str, Dict[str, Any]] = {
 
 def _cell_path(out_dir: str, arch: str, shape: str, mesh_kind: str,
                quant: str) -> str:
-    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}__{quant}.json")
+    import re
+    safe = re.sub(r"[^A-Za-z0-9._-]+", "-", quant)  # policy strings have */=,
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}__{safe}.json")
 
 
 def analytic_model_flops(cfg, shape) -> float:
@@ -97,12 +99,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str = "single",
 
     from repro.configs import ARCHS, LONG_CONTEXT_ARCHS, RunConfig
     from repro.configs.base import SHAPES
-    from repro.core.quantizers import QuantSpec, QuantizedTensor
+    from repro.core.policy import QuantPolicy
+    from repro.core.quantizers import QuantizedTensor
     from repro.launch import hlo_analysis, hlo_parser
     from repro.launch.mesh import make_production_mesh
     from repro.launch.train import (abstract_train_state, batch_shardings,
                                     make_train_step, state_shardings)
-    from repro.nn.models import build_model, input_specs, quantize_params
+    from repro.nn.models import apply_policy, build_model, input_specs
 
     cfg = ARCHS[arch]
     shape = SHAPES[shape_name]
@@ -144,25 +147,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str = "single",
                          out_shardings=(ss, None), donate_argnums=(0,))
         args = (state_abs, batch_abs)
     else:
-        # serving: weights quantized to the paper's normalized-posit format
-        # (pofx8) or kept bf16 (baseline); decode cache sharded + donated.
+        # serving: weights quantized per the --quant policy string — one
+        # format ("pofx8es2") or mixed rules ("attn/*=pofx8es2,*=bf16");
+        # decode cache sharded + donated. Quantized leaves keep their codes
+        # replicated-scale sharding tree structure (QuantizedTensor nodes).
         p_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
         p_shard = model.param_shardings(p_abs)
-        if quant.startswith("pofx"):
-            spec = QuantSpec(kind="pofx", N=8, ES=2, M=8)
+        if quant not in ("bf16", "fp32"):
+            policy = QuantPolicy.from_string(quant)
             p_abs = jax.eval_shape(
-                lambda: quantize_params(model.init(jax.random.PRNGKey(0)), spec))
-            flat_s, td = jax.tree_util.tree_flatten(
-                p_shard, is_leaf=lambda x: x is None)
-            objs = td.flatten_up_to(p_abs)
-            flat_q = [QuantizedTensor(s, repl, o.spec)
-                      if isinstance(o, QuantizedTensor) else s
-                      for s, o in zip(flat_s, objs)]
-            p_shard = jax.tree_util.tree_unflatten(td, flat_q)
-        elif quant == "fxp8":
-            spec = QuantSpec(kind="fxp", M=8, F=7)
-            p_abs = jax.eval_shape(
-                lambda: quantize_params(model.init(jax.random.PRNGKey(0)), spec))
+                lambda: apply_policy(model.init(jax.random.PRNGKey(0)),
+                                     policy))
             flat_s, td = jax.tree_util.tree_flatten(
                 p_shard, is_leaf=lambda x: x is None)
             objs = td.flatten_up_to(p_abs)
@@ -291,8 +286,9 @@ def main(argv=None) -> int:
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
-    ap.add_argument("--quant", default="auto",
-                    help="auto|bf16|pofx8|fxp8 (auto: bf16 train, pofx8 serve)")
+    from repro.core.policy import add_policy_arg
+    add_policy_arg(ap, default="auto",
+                   extra_help="'auto' = bf16 train / pofx8 serve")
     ap.add_argument("--out", default=OUT_DIR)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")

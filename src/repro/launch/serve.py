@@ -1,10 +1,12 @@
 """Serving driver: prefill a batch of prompts, decode with donated cache.
 
 Demonstrates the paper's deployment story end to end on real (CPU-sized)
-shapes: weights post-training-quantized to normalized Posit(N-1,ES) codes
-(PoFx Move&Store), the KV cache donated and updated in place, greedy
-decode. Prints tokens/s and the parameter-storage footprint vs bf16/fp32
-(the paper's Table 6 storage row, measured on the actual pytree).
+shapes: weights post-training-quantized per a QuantPolicy — one format
+(``--quant pofx8es2``) or mixed per-layer formats
+(``--quant "attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16"``) — the KV cache donated
+and updated in place, greedy decode. Prints tokens/s and a per-rule
+parameter-storage breakdown (the paper's Table 6 storage rows, measured on
+the actual pytree).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
         --quant pofx8 --prompt-len 64 --gen 32
@@ -19,33 +21,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
-from repro.core.quantizers import QuantSpec, QuantizedTensor, storage_bits
-from repro.nn.models import build_model, quantize_params
+from repro.core.policy import QuantPolicy, add_policy_arg, storage_report
+from repro.nn.models import apply_policy, build_model
 
-
-def param_storage_report(params) -> str:
-    total_bits = 0
-    total_n = 0
-    for leaf in jax.tree.leaves(
-            params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
-        if isinstance(leaf, QuantizedTensor):
-            total_bits += storage_bits(leaf)
-            total_n += int(np.prod(leaf.codes.shape))
-        else:
-            total_bits += leaf.size * leaf.dtype.itemsize * 8
-            total_n += leaf.size
-    bpw = total_bits / max(total_n, 1)
-    return (f"params={total_n/1e6:.1f}M stored={total_bits/8/2**20:.1f}MiB "
-            f"({bpw:.2f} bits/weight; vs fp32 {32/bpw:.1f}x, "
-            f"vs bf16 {16/bpw:.1f}x smaller)")
+# Back-compat name; the policy-aware report lives in repro.core.policy.
+param_storage_report = storage_report
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--quant", default="pofx8",
-                    choices=["bf16", "fxp8", "pofx8", "posit8"])
+    add_policy_arg(ap, default="pofx8")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
@@ -57,12 +44,10 @@ def main(argv=None) -> None:
     rcfg = RunConfig(remat="none")
     model = build_model(cfg, rcfg)
     params = model.init(jax.random.PRNGKey(0))
-    if args.quant != "bf16":
-        spec = {"pofx8": QuantSpec(kind="pofx", N=8, ES=2, M=8),
-                "fxp8": QuantSpec(kind="fxp", M=8, F=7),
-                "posit8": QuantSpec(kind="posit", N=8, ES=2)}[args.quant]
-        params = quantize_params(params, spec)
-    print(f"[{args.arch} quant={args.quant}] {param_storage_report(params)}")
+    policy = QuantPolicy.from_string(args.quant)
+    params = apply_policy(params, policy)
+    print(f"[{args.arch} quant={policy.to_string()}]")
+    print(storage_report(params, policy))
 
     B, P = args.batch, args.prompt_len
     prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
@@ -75,9 +60,11 @@ def main(argv=None) -> None:
     cache = model.init_cache(B, max_len, enc_len=P)
 
     t0 = time.perf_counter()
+    # frames is a real jit argument (not a closed-over constant): a new
+    # encoder batch must not silently reuse the baked-in prefill trace.
     cache, logits = jax.jit(
-        lambda p, c, t: model.prefill(p, t, cache=c, frames=frames),
-        donate_argnums=(1,))(params, cache, prompts)
+        lambda p, c, t, f: model.prefill(p, t, cache=c, frames=f),
+        donate_argnums=(1,))(params, cache, prompts, frames)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 

@@ -11,11 +11,13 @@ Provides, for every assigned family (dense / moe / encdec / ssm / hybrid):
   init_cache()         decode state (KV / SSM), sequence- or batch-sharded
   prefill()/decode_step()  serving path; cache donated by the launcher
 
-The paper's technique enters through ``quantize_params``: eligible matmul
-weights become ``QuantizedTensor`` (normalized-posit codes + normalizer
-scale); every layer dispatches through ``matmul_param`` which routes
-quantized weights to the PoFx datapath. Norms / SSM recurrence params /
-router weights are excluded (DESIGN.md §5).
+The paper's technique enters through ``apply_policy`` (uniform back-compat
+shim: ``quantize_params``): eligible matmul weights become
+``QuantizedTensor`` (normalized-posit codes + normalizer scale) in the
+format the QuantPolicy's path rules assign them; every layer dispatches
+through ``matmul_param`` which routes quantized weights to the PoFx
+datapath, so mixed per-layer formats coexist in one forward pass. Norms /
+SSM recurrence params / router weights are excluded (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -28,13 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.policy import QuantPolicy
 from repro.core.quantizers import QuantSpec, QuantizedTensor, quantize
 from .layers import dense_init, matmul_param, param_value, rmsnorm
 from .sharding import ShardingCtx, make_ctx
 from . import transformer as T
 from . import ssm as S
 
-__all__ = ["LM", "build_model", "quantize_params", "input_specs", "ce_loss"]
+__all__ = ["LM", "build_model", "apply_policy", "quantize_params",
+           "input_specs", "ce_loss"]
 
 
 def _dt(name: str):
@@ -609,13 +613,20 @@ _NEVER_QUANT = ("ln", "norm", "A_log", "dt_bias", "D", "router", "conv_w",
                 "conv_b", "q_norm", "k_norm")
 
 
-def quantize_params(params, spec: QuantSpec, *, quant_embed: bool = True):
-    """Convert eligible weight matrices to QuantizedTensor storage.
+def apply_policy(params, policy):
+    """Convert weight matrices to QuantizedTensor storage per a QuantPolicy.
 
-    Eligible = >=2D matmul weights (attention/MLP/MoE/SSM projections and,
-    optionally, embed/unembed). Norm scales, SSM recurrence params, conv
-    taps and MoE router weights stay float (DESIGN.md §5).
+    ``policy`` is a QuantPolicy or policy string (see repro.core.policy).
+    Each eligible leaf — a >=2D matmul weight: attention/MLP/MoE/SSM
+    projections and embed/unembed — is matched against the policy's ordered
+    path-glob rules; the first matching rule's spec decides its format.
+    Norm scales, SSM recurrence params, conv taps and MoE router weights are
+    never quantized regardless of rules (DESIGN.md §5), as is any leaf no
+    rule matches or a "keep" rule claims. fp32/bf16 rules cast in place
+    (no QuantizedTensor wrapper — the float fast path stays float).
     """
+    if isinstance(policy, str):
+        policy = QuantPolicy.from_string(policy)
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     treedef = jax.tree_util.tree_structure(params)
     out = []
@@ -627,17 +638,31 @@ def quantize_params(params, spec: QuantSpec, *, quant_embed: bool = True):
         stack_depth = 0
         if "blocks" in names or "enc_blocks" in names:
             stack_depth = 2 if "dense" in names else 1
-        skip = (leaf.ndim < 2 + stack_depth
-                or any(t in name for t in _NEVER_QUANT)
-                or (not quant_embed and ("embed" in name)))
-        if skip:
+        eligible = (leaf.ndim >= 2 + stack_depth
+                    and not any(t in name for t in _NEVER_QUANT))
+        spec = policy.match(name) if eligible else None
+        if spec is None:
             out.append(leaf)
+            continue
+        if spec.kind in ("fp32", "bf16"):
+            dt = jnp.float32 if spec.kind == "fp32" else jnp.bfloat16
+            out.append(jnp.asarray(leaf).astype(dt))
             continue
         fn = lambda w: quantize(w.astype(jnp.float32), spec, axis=-1)
         for _ in range(stack_depth):
             fn = jax.vmap(fn)
         out.append(fn(jnp.asarray(leaf)))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_params(params, spec: QuantSpec, *, quant_embed: bool = True):
+    """Back-compat shim: uniform-policy application of one QuantSpec.
+
+    Equivalent to ``apply_policy(params, QuantPolicy.uniform(spec))``, with
+    ``quant_embed=False`` expressed as a leading "*embed*=keep" rule.
+    """
+    rules = (("*embed*", None),) if not quant_embed else ()
+    return apply_policy(params, QuantPolicy(rules=rules + (("*", spec),)))
 
 
 # ---------------------------------------------------------------------------

@@ -22,15 +22,23 @@ Fault-tolerance contract:
     bit-packed normalized Posit(N-1,ES) codes + per-channel scale when a
     QuantSpec is supplied: 7 bits/weight vs 32 (fp32) is a 4.6x smaller
     checkpoint, the Table-6 storage row at rest.
+  * quantized-tensor round-trip — ``QuantizedTensor`` leaves (post-training
+    quantized params, see repro.core.policy) are first-class: codes are
+    bit-packed at their stored width, the spec is recorded in the manifest
+    as its canonical grammar string, and ``restore`` rebuilds identical
+    QuantizedTensor objects. ``save(..., policy=...)`` additionally records
+    the QuantPolicy string so a serving relaunch can recover it via
+    ``read_manifest``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import pickle
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +46,8 @@ import numpy as np
 
 from repro.core.normalized_posit import (norm_decode_np, norm_encode_np,
                                          pack_bits, unpack_bits)
-from repro.core.quantizers import QuantSpec
+from repro.core.policy import QuantPolicy, format_spec, parse_spec
+from repro.core.quantizers import QuantSpec, QuantizedTensor
 
 __all__ = ["CheckpointManager"]
 
@@ -77,31 +86,47 @@ class CheckpointManager:
     # -- save -----------------------------------------------------------------
 
     def save(self, step: int, state: Any,
-             param_compress: Optional[QuantSpec] = None) -> None:
+             param_compress: Optional[QuantSpec] = None,
+             policy: Optional[Union[QuantPolicy, str]] = None) -> None:
         self.wait()
-        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            state, is_leaf=lambda x: isinstance(x, QuantizedTensor))
         host_leaves = []
         for path, leaf in flat:
+            if isinstance(leaf, QuantizedTensor):
+                host_leaves.append(QuantizedTensor(
+                    np.asarray(jax.device_get(leaf.codes)),
+                    np.asarray(jax.device_get(leaf.scale)), leaf.spec))
+                continue
             arr = np.asarray(jax.device_get(leaf))
             compress = (param_compress is not None and _is_param_path(path)
                         and np.issubdtype(arr.dtype, np.floating)
                         and arr.ndim >= 2)
             host_leaves.append((arr, compress))
-        payload = (step, treedef, host_leaves, param_compress)
+        policy_s = (policy.to_string() if isinstance(policy, QuantPolicy)
+                    else policy)
+        payload = (step, treedef, host_leaves, param_compress, policy_s)
         if self.async_save:
             self._thread = threading.Thread(target=self._write, args=payload)
             self._thread.start()
         else:
             self._write(*payload)
 
-    def _write(self, step, treedef, host_leaves, spec) -> None:
+    def _write(self, step, treedef, host_leaves, spec, policy_s=None) -> None:
         tmp = os.path.join(self.dir, f".tmp_{step:08d}")
         final = os.path.join(self.dir, f"step_{step:08d}")
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         manifest: Dict[str, Any] = {"step": step, "leaves": []}
-        for i, (arr, compress) in enumerate(host_leaves):
+        if policy_s is not None:
+            manifest["quant_policy"] = policy_s
+        for i, item in enumerate(host_leaves):
             name = f"leaf_{i:05d}.npy"
+            if isinstance(item, QuantizedTensor):
+                entry = self._write_quantized(tmp, name, i, item)
+                manifest["leaves"].append(entry)
+                continue
+            arr, compress = item
             entry = {"file": name, "shape": list(arr.shape),
                      "dtype": str(arr.dtype), "compressed": bool(compress)}
             if compress:
@@ -128,6 +153,51 @@ class CheckpointManager:
         os.rename(tmp, final)
         self._gc()
 
+    @staticmethod
+    def _write_quantized(tmp: str, name: str, i: int,
+                         qt: QuantizedTensor) -> Dict[str, Any]:
+        """One QuantizedTensor leaf: bit-packed codes + scale + spec string."""
+        spec = qt.spec
+        codes = np.asarray(qt.codes)
+        entry: Dict[str, Any] = {
+            "file": name, "shape": list(codes.shape),
+            "dtype": str(codes.dtype), "qspec": format_spec(spec),
+            "count": int(codes.size),
+            "scale_file": f"scale_{i:05d}.npy",
+        }
+        if spec.rounding != "trunc":  # not expressible in the grammar
+            entry["rounding"] = spec.rounding
+        k = spec.stored_bits
+        if spec.kind in ("fp32", "bf16") or k > 16:
+            entry["packed"] = False
+            np.save(os.path.join(tmp, name), codes)
+        else:
+            # fxp codes are signed two's complement: mask to k bits before
+            # packing and sign-extend on restore.
+            entry["packed"] = True
+            masked = codes.astype(np.int64) & ((1 << k) - 1)
+            np.save(os.path.join(tmp, name), pack_bits(masked, k))
+        np.save(os.path.join(tmp, entry["scale_file"]), np.asarray(qt.scale))
+        return entry
+
+    @staticmethod
+    def _read_quantized(root: str, entry: Dict[str, Any]) -> QuantizedTensor:
+        spec = parse_spec(entry["qspec"])
+        if "rounding" in entry:
+            spec = dataclasses.replace(spec, rounding=entry["rounding"])
+        raw = np.load(os.path.join(root, entry["file"]))
+        dtype = _np_dtype(entry["dtype"])
+        if entry.get("packed"):
+            k = spec.stored_bits
+            codes = unpack_bits(raw, k, entry["count"]).astype(np.int64)
+            if spec.kind == "fxp":  # sign-extend k-bit two's complement
+                codes = codes - ((codes >> (k - 1)) << k)
+            codes = codes.astype(dtype).reshape(entry["shape"])
+        else:
+            codes = _reinterpret(raw, entry["dtype"]).reshape(entry["shape"])
+        scale = np.load(os.path.join(root, entry["scale_file"]))
+        return QuantizedTensor(codes, scale, spec)
+
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:
@@ -153,6 +223,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """Checkpoint metadata (incl. "quant_policy" when saved with one)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        root = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(root, "manifest.json")) as f:
+            return json.load(f)
+
     def restore(self, step: Optional[int] = None, shardings: Any = None) -> Any:
         """Load a checkpoint; device_put onto ``shardings`` (elastic restore).
 
@@ -170,6 +251,9 @@ class CheckpointManager:
             treedef = pickle.load(f)
         leaves = []
         for entry in manifest["leaves"]:
+            if "qspec" in entry:
+                leaves.append(self._read_quantized(root, entry))
+                continue
             raw = np.load(os.path.join(root, entry["file"]))
             if entry.get("compressed"):
                 N, ES = entry["N"], entry["ES"]

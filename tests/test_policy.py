@@ -1,0 +1,254 @@
+"""QuantPolicy API: spec grammar round-trip, rule precedence, apply_policy
+equivalence with the legacy uniform path, mixed-policy consistency
+(fxp_view / storage_bits), pareto-derived policies, quantized-checkpoint
+round-trip with policy metadata."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.policy import (PRESETS, QuantPolicy, format_spec, parse_spec,
+                               policy_from_pareto, storage_report)
+from repro.core.quantizers import (QuantSpec, QuantizedTensor, dequantize,
+                                   fxp_view, quantize, storage_bits)
+from repro.nn.models import apply_policy, build_model, quantize_params
+
+MIXED = "attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16"
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = smoke(ARCHS["yi-9b"])
+    model = build_model(cfg, RunConfig(remat="none"))
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [
+    "fp32", "bf16", "fxp8", "fxp8f7", "fxp16", "fxp7f6", "posit8es2",
+    "posit6es1", "posit8", "pofx8es2", "pofx8", "pofx6es1m8-direct",
+    "pofx8es2@tensor", "fxp8@none", "posit8es2@tensor", "keep",
+])
+def test_spec_string_roundtrip(s):
+    spec = parse_spec(s)
+    assert parse_spec(format_spec(spec)) == spec
+
+
+def test_spec_defaults_match_legacy_presets():
+    # the exact QuantSpecs serve.py's hand-rolled preset dict used to build
+    assert parse_spec("pofx8") == QuantSpec(kind="pofx", N=8, ES=2, M=8)
+    assert parse_spec("pofx8es2") == QuantSpec(kind="pofx", N=8, ES=2, M=8)
+    assert parse_spec("fxp8") == QuantSpec(kind="fxp", M=8, F=7)
+    assert parse_spec("posit8") == QuantSpec(kind="posit", N=8, ES=2)
+
+
+def test_spec_fields():
+    s = parse_spec("pofx6es1m8-direct")
+    assert (s.kind, s.N, s.ES, s.M, s.path) == ("pofx", 6, 1, 8, "direct")
+    assert parse_spec("pofx8es2@tensor").scale_mode == "tensor_pow2"
+    assert parse_spec("fxp8f7") == parse_spec("fxp8")
+
+
+@pytest.mark.parametrize("bad", ["pofx", "int8", "fxp8q3", "pofx8es2@bogus",
+                                 "posit8-direct", ""])
+def test_spec_parse_rejects_garbage(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# policy rules
+# ---------------------------------------------------------------------------
+
+
+def test_policy_first_match_wins_and_fallback():
+    p = QuantPolicy.from_string(
+        "attn/wq=posit8es2,attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16")
+    assert p.match("blocks/attn/wq").kind == "posit"   # earlier rule wins
+    assert p.match("blocks/attn/wo").kind == "pofx"
+    assert p.match("blocks/mlp/wg").kind == "fxp"
+    assert p.match("unembed").kind == "bf16"           # * fallback
+    assert p.match("embed").kind == "bf16"
+
+
+def test_policy_segment_anchoring():
+    p = QuantPolicy.from_string("embed=bf16,attn/*=pofx8es2")
+    assert p.match("embed") is not None
+    assert p.match("unembed") is None            # no substring false-positive
+    assert p.match("blocks/attn/wq") is not None  # implicit **/ prefix
+    assert p.match("attn/wq") is not None
+    assert p.match("blocks/mlp/wo") is None       # unmatched -> untouched
+
+
+def test_policy_string_roundtrip_and_presets():
+    p = QuantPolicy.from_string(MIXED)
+    assert QuantPolicy.from_string(p.to_string()) == p
+    uni = QuantPolicy.from_string("pofx8es2")
+    assert uni.rules == (("*", parse_spec("pofx8es2")),)
+    assert uni.to_string() == "pofx8es2"
+    for name in PRESETS:
+        pol = QuantPolicy.from_string(name)
+        assert pol.rules[-1][0] == "*", name  # presets end in a fallback
+    keep = QuantPolicy.from_string("embed=keep,*=fxp8")
+    assert keep.match("embed") is None
+
+
+# ---------------------------------------------------------------------------
+# apply_policy on a stacked-blocks model
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_policy_matches_legacy_quantize_params(model_params):
+    _, _, params = model_params
+    spec = QuantSpec(kind="pofx", N=8, ES=2, M=8)
+    old = quantize_params(params, spec)
+    new = apply_policy(params, "pofx8es2")
+    for a, b in zip(jax.tree_util.tree_leaves(old),
+                    jax.tree_util.tree_leaves(new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quant_embed_false_shim(model_params):
+    _, _, params = model_params
+    qp = quantize_params(params, QuantSpec(kind="pofx", N=8, ES=2, M=8),
+                         quant_embed=False)
+    assert not isinstance(qp["embed"], QuantizedTensor)
+    assert not isinstance(qp["unembed"], QuantizedTensor)
+    assert isinstance(qp["blocks"]["attn"]["wq"], QuantizedTensor)
+
+
+def test_never_quant_wins_over_rules(model_params):
+    _, _, params = model_params
+    qp = apply_policy(params, "*=fxp8")
+    assert not isinstance(qp["ln_f"], QuantizedTensor)
+    assert not isinstance(qp["blocks"]["ln1"], QuantizedTensor)
+
+
+def test_mixed_policy_formats_and_stacked_scales(model_params):
+    cfg, model, params = model_params
+    qp = apply_policy(params, MIXED)
+    wq = qp["blocks"]["attn"]["wq"]
+    wg = qp["blocks"]["mlp"]["wg"]
+    assert wq.spec.kind == "pofx" and wg.spec.kind == "fxp"
+    # stacked leaves keep per-layer scales (leading layer dim mapped)
+    assert wq.codes.shape[0] == cfg.n_layers
+    assert wq.scale.shape[0] == cfg.n_layers
+    assert qp["embed"].dtype == jnp.bfloat16  # bf16 rule casts, no wrapper
+    logits = model.forward(qp, jnp.zeros((2, 8), jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_fxp_view_storage_bits_consistent_under_mixed_policy(model_params):
+    _, _, params = model_params
+    qp = apply_policy(params, MIXED)
+    seen = set()
+    for leaf in jax.tree.leaves(
+            qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if not isinstance(leaf, QuantizedTensor):
+            continue
+        seen.add(leaf.spec.kind)
+        n = int(np.prod(leaf.codes.shape))
+        sn = int(np.prod(leaf.scale.shape))
+        assert storage_bits(leaf) == n * leaf.spec.stored_bits + sn * 32
+        codes, rescale = fxp_view(leaf)
+        assert codes.dtype == jnp.int8
+        # the int8 MAC view reconstructs the same values the LUT path sees
+        np.testing.assert_allclose(
+            np.asarray(codes, np.float32) * np.asarray(
+                jnp.broadcast_to(rescale, codes.shape), np.float32),
+            np.asarray(dequantize(leaf, jnp.float32)),
+            rtol=1e-5, atol=1e-6)
+    assert seen == {"pofx", "fxp"}
+
+
+def test_storage_report_per_rule(model_params):
+    _, _, params = model_params
+    policy = QuantPolicy.from_string(MIXED)
+    rep = storage_report(apply_policy(params, policy), policy)
+    assert "attn/*=pofx8es2" in rep
+    assert "mlp/*=fxp8" in rep
+    assert "TOTAL" in rep
+
+
+# ---------------------------------------------------------------------------
+# pareto-driven policy search
+# ---------------------------------------------------------------------------
+
+
+def test_policy_from_pareto_picks_cheap_formats():
+    rng = np.random.default_rng(0)
+    groups = {
+        "attn/*": [jnp.asarray(rng.normal(0, 0.05, (64, 32)), jnp.float32)],
+        "mlp/*": [jnp.asarray(rng.normal(0, 0.02, (64, 64)), jnp.float32)],
+    }
+    pol = policy_from_pareto(groups, max_avg_rel=0.2, fallback="bf16")
+    assert [r[0] for r in pol.rules] == ["attn/*", "mlp/*", "*"]
+    for pat, spec in pol.rules[:-1]:
+        assert spec.kind in ("fxp", "posit", "pofx")
+        assert spec.stored_bits <= 16  # error budget met without fp32
+    assert pol.rules[-1][1].kind == "bf16"
+    QuantPolicy.from_string(pol.to_string())  # serializable
+
+
+# ---------------------------------------------------------------------------
+# quantized checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_quantized_roundtrip_with_policy(tmp_path, model_params):
+    from repro.runtime import CheckpointManager
+
+    _, _, params = model_params
+    policy = QuantPolicy.from_string(MIXED)
+    qp = apply_policy(params, policy)
+    cm = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    cm.save(3, {"params": qp}, policy=policy)
+    assert cm.read_manifest()["quant_policy"] == policy.to_string()
+    got = cm.restore()["params"]
+    flat_a = jax.tree_util.tree_flatten(
+        qp, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
+    flat_b = jax.tree_util.tree_flatten(
+        got, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
+    n_qt = 0
+    for a, b in zip(flat_a, flat_b):
+        if isinstance(a, QuantizedTensor):
+            n_qt += 1
+            assert isinstance(b, QuantizedTensor)
+            assert a.spec == b.spec  # grammar string round-trips the spec
+            np.testing.assert_array_equal(np.asarray(a.codes),
+                                          np.asarray(b.codes))
+            np.testing.assert_array_equal(np.asarray(a.scale, np.float32),
+                                          np.asarray(b.scale, np.float32))
+        else:
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+    assert n_qt > 0
+
+
+def test_checkpoint_packs_codes_at_stored_width(tmp_path):
+    from repro.runtime import CheckpointManager
+
+    w = jnp.asarray(np.linspace(-1, 1, 64 * 64).reshape(64, 64), jnp.float32)
+    qt = quantize(w, parse_spec("pofx8es2"), axis=-1)   # 7-bit codes
+    cm = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    cm.save(1, {"params": {"w": qt}})
+    import os
+    root = os.path.join(str(tmp_path), "step_00000001")
+    packed = os.path.getsize(os.path.join(root, "leaf_00000.npy"))
+    # 4096 codes at 7 bits ~ 3584 bytes (+npy header), far below 1B/code
+    assert packed < 4096 * 0.95
+    got = cm.restore()["params"]["w"]
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(qt.codes))
+    # fxp (signed) codes survive the pack/sign-extend path too
+    qf = quantize(w, parse_spec("fxp8"), axis=-1)
+    cm.save(2, {"params": {"w": qf}})
+    gf = cm.restore(step=2)["params"]["w"]
+    assert int(np.asarray(qf.codes).min()) < 0
+    np.testing.assert_array_equal(np.asarray(gf.codes), np.asarray(qf.codes))

@@ -11,7 +11,10 @@ System invariants the paper's correctness rests on:
   * posit-compressed mean transport error is bounded by the lattice step.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fxp
 from repro.core.normalized_posit import (norm_compress, norm_decode_np,
