@@ -28,6 +28,7 @@ BENCHES = [
     ("fig20_accel", "benchmarks.bench_fig20_accel"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("serve_engine", "benchmarks.bench_serve_engine"),
 ]
 
 

@@ -1,10 +1,13 @@
-"""Serving example: batched generation with PoFx-stored weights.
+"""Serving example: continuous-batching generation with PoFx-stored weights.
 
-Wraps repro.launch.serve: loads/initializes a model, quantizes the weights
-to the paper's normalized-posit format, prefills a batch of prompts and
-decodes greedily with a donated KV cache, reporting storage + throughput.
+Wraps repro.launch.serve: initializes a model, quantizes the weights to the
+paper's normalized-posit format, and serves a staggered stream of requests
+through the slot-based engine (admission, scan-fused decode, per-slot
+stopping), reporting storage + throughput. ``--use-kernel`` routes the
+quantized matmuls through the fused Pallas PoFx kernel (interpret on CPU).
 
     PYTHONPATH=src python examples/serve_quantized.py --arch moonshot-v1-16b-a3b
+    PYTHONPATH=src python examples/serve_quantized.py --use-kernel --temperature 0.8
 """
 import argparse
 
@@ -14,6 +17,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--quant", default="pofx8")
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
-    serve_main(["--arch", args.arch, "--smoke", "--quant", args.quant,
-                "--batch", "4", "--prompt-len", "48", "--gen", "16"])
+    argv = ["--arch", args.arch, "--smoke", "--quant", args.quant,
+            "--batch", "4", "--prompt-len", "48", "--gen", "16",
+            "--arrival-gap", "4", "--temperature", str(args.temperature)]
+    if args.use_kernel:
+        argv.append("--use-kernel")
+    serve_main(argv)

@@ -73,7 +73,11 @@ def pofx_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array,
         interpret = jax.default_backend() == "cpu"
     m, kdim = x.shape
     k2, n = codes.shape
-    assert kdim == k2, (x.shape, codes.shape)
+    if kdim != k2:
+        # A real error, not a bare assert: this check guards the public
+        # kernel entry and must survive `python -O`.
+        raise ValueError(
+            f"contraction mismatch: x {x.shape} @ codes {codes.shape}")
     bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
     pm, pn, pk = (-m) % bm, (-n) % bn, (-kdim) % bk
     xp = jnp.pad(x, ((0, pm), (0, pk)))

@@ -1,0 +1,456 @@
+"""Continuous-batching serving engine: slot scheduler + scan-fused decode.
+
+The paper's deployment story is PTQ inference through the PoFx datapath;
+this module is the system that serves it under real traffic instead of the
+old one-shot fixed-batch driver. Design (DESIGN.md §7):
+
+* **Slots.** A fixed-slot batch of ``n_slots`` sequences shares one donated
+  decode cache whose ``pos`` leaf is a per-slot (B,) length vector. Slots
+  mask independently: ``decode_step`` rotates, writes KV and masks
+  attention per slot, so requests of different ages coexist in one batch.
+* **Admission.** A request is prefilled alone (batch 1, optionally padded
+  to a length bucket to bound recompilation) and its cache scattered into
+  a free slot along every leaf's batch axis (``LM.cache_logical`` names
+  it). The first token is sampled from the prefill logits.
+* **Decode.** ``chunk`` steps run as ONE jitted ``lax.scan`` — no
+  per-step Python dispatch. Per-slot stopping (EOS / max-new-tokens)
+  freezes a finished slot inside the chunk: its pos stops advancing and it
+  emits pad tokens until the host retires it and admits the next request.
+* **Sampling.** Greedy (temperature 0), temperature, and top-k compose
+  per slot from (B,) parameter vectors; each slot folds its own PRNG key
+  with its position, so a request's sample stream is reproducible
+  regardless of batch composition — eviction + re-admission resumes the
+  identical stream.
+* **Eviction.** ``evict`` returns a running request to the pending queue
+  with its generated prefix folded into the context; re-admission prefills
+  prompt+prefix and continues. Scheduler invariants are tested in
+  tests/test_engine.py.
+
+``use_kernel`` is decided by the ``LM`` the engine wraps
+(``build_model(..., use_kernel=True)``), so quantized serving exercises
+the fused Pallas PoFx/FxP kernels end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplingParams", "Request", "RequestState", "ServeEngine",
+           "sample_tokens"]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs; all compose per slot inside the scan."""
+    temperature: float = 0.0     # 0 = greedy (argmax)
+    top_k: int = 0               # 0 = no truncation
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: np.ndarray           # (P,) int token ids
+    max_new: int = 32            # tokens to generate (incl. prefill-sampled)
+    sampling: SamplingParams = SamplingParams()
+    arrival: float = 0.0         # virtual time (decode steps) of arrival
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    context: np.ndarray          # tokens to prefill (prompt, +prefix on resume)
+    slot: int = -1
+    out: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None   # "eos" | "length"
+    admitted_at: float = -1.0
+    finished_at: float = -1.0
+    n_evictions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
+                  topks: jax.Array, use_topk: bool = True) -> jax.Array:
+    """Pluggable per-slot sampling: greedy / temperature / top-k.
+
+    logits (B, V); keys (B,) PRNG keys; temps (B,) float (0 = greedy);
+    topks (B,) int (0 = full distribution). Greedy slots ignore their key,
+    so free slots can carry stale keys safely. ``use_topk=False`` (a
+    static promise that every topk is 0) skips the O(V log V) sort — the
+    engine sets it per chunk so temperature-only serving never pays for
+    top-k in the hot loop.
+    """
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1)
+    if use_topk:
+        k = jnp.clip(topks, 1, V)
+        sorted_lg = jnp.sort(logits, axis=-1)         # ascending
+        kth = jnp.take_along_axis(sorted_lg, (V - k)[:, None], axis=-1)
+        filt = jnp.where((topks[:, None] > 0) & (logits < kth), NEG_INF,
+                         logits)
+    else:
+        filt = logits
+    scaled = filt / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Slot-based continuous batching over one ``LM`` + quantized params.
+
+    Host side owns scheduling (pending queue, slot occupancy, token
+    streams); device side owns the batch state (cache, last tokens, slot
+    keys). Each ``step`` call launches one jitted scan of ``chunk`` decode
+    steps; admission happens between chunks.
+    """
+
+    def __init__(self, model, params, *, n_slots: int = 4, max_len: int = 512,
+                 eos_id: Optional[int] = None, pad_id: int = 0,
+                 chunk: int = 8, prompt_bucket: int = 1, seed: int = 0):
+        if model.cfg.family == "encdec":
+            raise NotImplementedError(
+                "encdec serving needs per-request encoder frames; use the "
+                "one-shot path in repro.launch.serve")
+        if prompt_bucket > 1 and model.cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                "prompt_bucket > 1 right-pads prefill, which pollutes SSM "
+                "recurrent state; use exact-length prefill (bucket 1)")
+        if n_slots < 1 or chunk < 1:
+            raise ValueError(
+                f"need n_slots >= 1 and chunk >= 1, got {n_slots}/{chunk}")
+        self.model, self.params = model, params
+        self.n_slots, self.max_len = int(n_slots), int(max_len)
+        self.eos_id = eos_id
+        self.pad_id = int(pad_id)
+        self.chunk = int(chunk)
+        self.prompt_bucket = max(1, int(prompt_bucket))
+
+        self.cache = model.init_cache(n_slots, max_len)
+        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self._cache_log_flat = jax.tree_util.tree_flatten(
+            model.cache_logical(), is_leaf=lambda x: isinstance(x, tuple))[0]
+        self._tok = jnp.full((n_slots, 1), self.pad_id, jnp.int32)
+        self._base_key = jax.random.PRNGKey(seed)
+        # placeholder slot keys (replaced at admit; fold stream disjoint
+        # from per-request keys, which fold non-negative rids)
+        filler = jax.random.fold_in(self._base_key, np.uint32(0xFFFFFFFF))
+        self._keys = jnp.stack(
+            [jax.random.fold_in(filler, i) for i in range(n_slots)])
+
+        # host-side scheduler state
+        self._slot_rid = np.full(n_slots, -1, np.int64)
+        self._states: Dict[int, RequestState] = {}
+        self._pending: Deque[int] = deque()
+        self._done_box: List[RequestState] = []
+        self.clock = 0.0              # virtual time = decode steps executed
+        self.prefill_time = 0.0
+        self.decode_time = 0.0
+        self.decode_steps = 0
+        self.n_prefill_sampled = 0    # tokens sampled from prefill logits
+        #   (one per admission, so one per request plus one per eviction —
+        #    the exact complement of decode-generated tokens)
+
+        self._chunk_fn = jax.jit(
+            self._chunk_impl,
+            static_argnames=("steps", "eos", "pad", "greedy_only",
+                             "topk_any"),
+            donate_argnums=(1,))
+        self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self._prefill_fn = jax.jit(
+            lambda p, c, t, l: model.prefill(p, t, cache=c, length=l),
+            donate_argnums=(1,))
+        self._sample_fn = jax.jit(sample_tokens)
+
+    # -- scheduler (host) ----------------------------------------------------
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [b for b in range(self.n_slots) if self._slot_rid[b] < 0]
+
+    @property
+    def active_rids(self) -> List[int]:
+        return [int(r) for r in self._slot_rid if r >= 0]
+
+    @property
+    def pending_rids(self) -> List[int]:
+        return list(self._pending)
+
+    def submit(self, req: Request) -> None:
+        if req.rid in self._states:
+            raise ValueError(f"duplicate request id {req.rid}")
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if prompt.size >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {prompt.size} >= "
+                f"max_len {self.max_len}")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        self._states[req.rid] = RequestState(req=req, context=prompt)
+        self._pending.append(req.rid)
+
+    def evict(self, rid: int) -> None:
+        """Preempt a running request back to the head of the pending queue.
+
+        Its generated prefix folds into the context, so re-admission
+        prefills prompt+prefix and resumes the identical sample stream
+        (slot keys fold with absolute position).
+        """
+        st = self._states[rid]
+        if st.slot < 0 or st.done:
+            raise ValueError(f"request {rid} is not running")
+        self._slot_rid[st.slot] = -1
+        st.slot = -1
+        st.n_evictions += 1
+        st.context = np.concatenate(
+            [np.asarray(st.req.prompt, np.int32).reshape(-1),
+             np.asarray(st.out, np.int32)])
+        self._pending.appendleft(rid)
+
+    def admit_ready(self) -> int:
+        """Admit arrived pending requests into free slots; returns count.
+
+        Scans the whole queue (FIFO among arrived), not just the head: a
+        manually-submitted queue need not be arrival-ordered, and a
+        not-yet-arrived head must not block an already-arrived request
+        behind it (that would livelock ``run``'s idle fast-forward).
+        """
+        n = 0
+        while self.free_slots:
+            rid = next((r for r in self._pending
+                        if self._states[r].req.arrival <= self.clock), None)
+            if rid is None:
+                break
+            self._pending.remove(rid)
+            self._admit(rid, self.free_slots[0])
+            n += 1
+        return n
+
+    def _eff_max_new(self, st: RequestState) -> int:
+        """max_new clamped so decode never writes past max_len."""
+        room = self.max_len - int(np.asarray(st.req.prompt).size)
+        return min(st.req.max_new, room)
+
+    def _admit(self, rid: int, slot: int) -> None:
+        st = self._states[rid]
+        ctx = st.context
+        P = int(ctx.size)
+        # bucket-rounded length clamped to the cache: prefill writes Pb KV
+        # positions, and a resumed context may sit close to max_len
+        Pb = min(-(-P // self.prompt_bucket) * self.prompt_bucket,
+                 self.max_len)
+        padded = np.full((1, Pb), self.pad_id, np.int32)
+        padded[0, :P] = ctx
+        t0 = time.perf_counter()
+        small = self.model.init_cache(1, self.max_len)
+        # bucket 1 means exact-length prompts: take the length=None path so
+        # SSM/hybrid (which refuse right-padded prefill) serve too.
+        length = None if Pb == P else jnp.asarray(P, jnp.int32)
+        small, logits = self._prefill_fn(
+            self.params, small, jnp.asarray(padded), length)
+        key = jax.random.fold_in(self._base_key, rid)
+        st0 = self._states[rid].req.sampling
+        tok0 = self._sample_fn(
+            logits, jax.random.fold_in(key, P - 1)[None],
+            jnp.asarray([st0.temperature], jnp.float32),
+            jnp.asarray([st0.top_k], jnp.int32))
+        self.cache = self._scatter_fn(self.cache, small,
+                                      jnp.asarray(slot, jnp.int32))
+        tok0 = int(tok0[0])
+        self._tok = self._tok.at[slot, 0].set(tok0)
+        self._keys = self._keys.at[slot].set(key)
+        jax.block_until_ready(self._tok)
+        self.prefill_time += time.perf_counter() - t0
+
+        self._slot_rid[slot] = rid
+        st.slot = slot
+        if st.admitted_at < 0:
+            st.admitted_at = self.clock
+        st.out.append(tok0)
+        self.n_prefill_sampled += 1
+        if self.eos_id is not None and tok0 == self.eos_id:
+            self._finish(rid, "eos")
+        elif len(st.out) >= self._eff_max_new(st):
+            self._finish(rid, "length")
+
+    def _finish(self, rid: int, reason: str) -> None:
+        st = self._states[rid]
+        st.finish_reason = reason
+        st.finished_at = self.clock
+        if st.slot >= 0:
+            self._slot_rid[st.slot] = -1
+            st.slot = -1
+        self._done_box.append(st)
+
+    # -- device chunk --------------------------------------------------------
+
+    def _scatter_impl(self, big, small, slot):
+        """Write a batch-1 prefilled cache into slot ``slot`` of the big
+        cache, leaf by leaf along the axis ``cache_logical`` names "batch"
+        (pos, logical (), is per-slot scalar)."""
+        big_flat, treedef = jax.tree_util.tree_flatten(big)
+        small_flat = jax.tree_util.tree_flatten(small)[0]
+        out = []
+        for b, s, ax in zip(big_flat, small_flat, self._cache_log_flat):
+            if ax == ():
+                out.append(b.at[slot].set(
+                    jnp.ravel(jnp.asarray(s))[0].astype(b.dtype)))
+            else:
+                axis = ax.index("batch")
+                upd = jax.lax.index_in_dim(s, 0, axis=axis, keepdims=False)
+                out.append(jax.lax.dynamic_update_index_in_dim(
+                    b, upd.astype(b.dtype), slot, axis))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _chunk_impl(self, params, cache, tok, done, n_gen, keys, temps,
+                    topks, max_new, *, steps: int, eos: int, pad: int,
+                    greedy_only: bool, topk_any: bool):
+        """``steps`` decode iterations as one lax.scan; per-slot stopping.
+
+        A slot that emits EOS (or hits max_new) freezes: pos stops
+        advancing, later emissions are pad. The emitted-token semantics
+        mirror the host loop in ``step`` exactly. ``greedy_only`` (static,
+        host-known per chunk) skips the top-k sort + categorical draw in
+        the hot loop when every live slot has temperature 0 — argmax is
+        exactly what sample_tokens returns there.
+        """
+        model = self.model
+
+        def body(carry, _):
+            cache, tok, done, n_gen = carry
+            pos = cache["pos"]
+            cache, logits = model.decode_step(params, cache, tok)
+            if greedy_only:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                step_keys = jax.vmap(jax.random.fold_in)(keys, pos)
+                nxt = sample_tokens(logits, step_keys, temps, topks,
+                                    use_topk=topk_any)
+            stop = (nxt == eos) | (n_gen + 1 >= max_new)
+            nxt = jnp.where(done, pad, nxt)
+            n_gen = jnp.where(done, n_gen, n_gen + 1)
+            new_done = done | stop
+            cache = dict(cache, pos=jnp.where(done, pos, pos + 1))
+            return (cache, nxt[:, None], new_done, n_gen), nxt
+
+        (cache, tok, done, n_gen), toks = jax.lax.scan(
+            body, (cache, tok, done, n_gen), None, length=steps)
+        return cache, tok, done, n_gen, toks      # toks: (steps, B)
+
+    # -- chunk driver (host) -------------------------------------------------
+
+    def step(self, steps: Optional[int] = None) -> List[RequestState]:
+        """Run one scan-fused chunk; returns requests finished in it.
+
+        The chunk is capped by the largest remaining per-slot budget so a
+        tail chunk doesn't scan steps in which every slot is frozen — but
+        the cap rounds up to a power of two, because ``steps`` is a static
+        jit argument and every distinct value recompiles the whole scan:
+        pow2 rounding bounds wasted tail work below 2x useful steps while
+        bounding compile variants at log2(chunk) instead of chunk.
+        """
+        steps = int(steps or self.chunk)
+        B = self.n_slots
+        live = self._slot_rid >= 0
+        if not live.any():
+            return []
+        n_gen = np.zeros(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        topks = np.zeros(B, np.int32)
+        max_new = np.full(B, np.iinfo(np.int32).max, np.int32)
+        for b, rid in enumerate(self._slot_rid):
+            if rid < 0:
+                continue
+            st = self._states[rid]
+            n_gen[b] = len(st.out)
+            temps[b] = st.req.sampling.temperature
+            topks[b] = st.req.sampling.top_k
+            max_new[b] = self._eff_max_new(st)
+        eos = self.eos_id if self.eos_id is not None else -1
+        rem = int((max_new[live] - n_gen[live]).max())
+        steps = min(steps, 1 << max(rem - 1, 0).bit_length())
+
+        t0 = time.perf_counter()
+        self.cache, self._tok, _, _, toks = self._chunk_fn(
+            self.params, self.cache, self._tok, jnp.asarray(~live),
+            jnp.asarray(n_gen), self._keys, jnp.asarray(temps),
+            jnp.asarray(topks), jnp.asarray(max_new),
+            steps=steps, eos=int(eos), pad=self.pad_id,
+            greedy_only=bool((temps == 0).all()),
+            topk_any=bool((topks > 0).any()))
+        toks = np.asarray(toks)                  # blocks; (steps, B)
+        self.decode_time += time.perf_counter() - t0
+        self.decode_steps += steps
+        self.clock += steps
+
+        finished: List[RequestState] = []
+        for b, rid in enumerate(self._slot_rid):
+            if rid < 0:
+                continue
+            st = self._states[rid]
+            limit = self._eff_max_new(st)
+            for s in range(steps):
+                t = int(toks[s, b])
+                st.out.append(t)
+                if self.eos_id is not None and t == self.eos_id:
+                    self._finish(rid, "eos")
+                    break
+                if len(st.out) >= limit:
+                    self._finish(rid, "length")
+                    break
+            if st.done:
+                finished.append(st)
+        return finished
+
+    def run(self, requests: Sequence[Request],
+            chunk: Optional[int] = None) -> List[RequestState]:
+        """Serve a workload to completion; returns states sorted by rid.
+
+        Arrival times are in decode steps of virtual time; the clock
+        advances by each chunk's step count and fast-forwards over idle
+        gaps, so arrival mixes are reproducible independent of wall speed.
+        """
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self._pending or self.active_rids:
+            self.admit_ready()
+            if not self.active_rids:
+                nxt = min(self._states[rid].req.arrival
+                          for rid in self._pending)
+                self.clock = max(self.clock, nxt)
+                continue
+            self.step(chunk)
+        self.total_time = time.perf_counter() - t0
+        done, self._done_box = self._done_box, []
+        return sorted(done, key=lambda s: s.req.rid)
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        gen = sum(len(s.out) for s in self._states.values())
+        # one token per *admission* comes from prefill logits (so one per
+        # request plus one per eviction/resume); the rest are decode steps
+        n_dec = gen - self.n_prefill_sampled
+        return {
+            "requests": len(self._states),
+            "generated_tokens": gen,
+            "prefill_sampled_tokens": self.n_prefill_sampled,
+            "decode_tokens": n_dec,
+            "decode_steps": self.decode_steps,
+            "prefill_time_s": self.prefill_time,
+            "decode_time_s": self.decode_time,
+            "decode_tok_per_s": n_dec / self.decode_time
+            if self.decode_time else 0.0,
+        }

@@ -1,15 +1,26 @@
-"""Serving driver: prefill a batch of prompts, decode with donated cache.
+"""Serving driver: continuous-batching quantized serving through the engine.
 
-Demonstrates the paper's deployment story end to end on real (CPU-sized)
-shapes: weights post-training-quantized per a QuantPolicy — one format
-(``--quant pofx8es2``) or mixed per-layer formats
-(``--quant "attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16"``) — the KV cache donated
-and updated in place, greedy decode. Prints tokens/s and a per-rule
-parameter-storage breakdown (the paper's Table 6 storage rows, measured on
-the actual pytree).
+The paper's deployment story end to end: weights post-training-quantized per
+a QuantPolicy — one format (``--quant pofx8es2``) or mixed per-layer formats
+(``--quant "attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16"``) — served by the
+slot-based continuous-batching engine (``repro.launch.engine``): per-request
+admission, scan-fused multi-token decode with per-slot stopping, pluggable
+sampling. ``--use-kernel`` routes every quantized matmul through the fused
+Pallas PoFx/FxP kernels (the paper's Move&Store accelerator datapath;
+interpret mode on CPU), so quantized serving actually exercises them.
+
+Token accounting: ``--gen`` is the number of tokens *generated per request*
+(the first comes from the prefill logits, the remaining ``gen-1`` from
+decode steps); the decode tok/s rate divides decode-generated tokens by
+decode wall time, and the printed sample has exactly ``gen`` tokens.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
-        --quant pofx8 --prompt-len 64 --gen 32
+        --quant pofx8 --use-kernel --prompt-len 64 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+        --temperature 0.8 --top-k 40 --arrival-gap 8 --requests 12
+
+``--legacy`` (automatic for encdec, which needs per-batch encoder frames)
+runs the old one-shot fixed-batch greedy loop instead.
 """
 from __future__ import annotations
 
@@ -22,33 +33,21 @@ import numpy as np
 
 from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
 from repro.core.policy import QuantPolicy, add_policy_arg, storage_report
+from repro.launch.engine import Request, SamplingParams, ServeEngine
 from repro.nn.models import apply_policy, build_model
 
 # Back-compat name; the policy-aware report lives in repro.core.policy.
 param_storage_report = storage_report
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
-    ap.add_argument("--smoke", action="store_true")
-    add_policy_arg(ap, default="pofx8")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args(argv)
+def _legacy_main(args, cfg, model, params) -> None:
+    """One-shot fixed-batch greedy serving (the encdec path).
 
-    cfg = ARCHS[args.arch]
-    if args.smoke:
-        cfg = smoke_cfg(cfg)
-    rcfg = RunConfig(remat="none")
-    model = build_model(cfg, rcfg)
-    params = model.init(jax.random.PRNGKey(0))
-    policy = QuantPolicy.from_string(args.quant)
-    params = apply_policy(params, policy)
-    print(f"[{args.arch} quant={policy.to_string()}]")
-    print(storage_report(params, policy))
-
+    Generates exactly ``args.gen`` tokens per sequence: 1 sampled from the
+    prefill logits + ``gen-1`` decode steps — the reported rates divide by
+    the matching counts (the old driver concatenated ``gen+1`` tokens while
+    dividing by ``gen``).
+    """
     B, P = args.batch, args.prompt_len
     prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
                                  cfg.vocab_size)
@@ -56,7 +55,7 @@ def main(argv=None) -> None:
     if cfg.family == "encdec":
         frames = jax.random.normal(jax.random.PRNGKey(2), (B, P, cfg.d_model),
                                    jnp.float32)
-    max_len = P + args.gen + 1
+    max_len = P + args.gen
     cache = model.init_cache(B, max_len, enc_len=P)
 
     t0 = time.perf_counter()
@@ -71,8 +70,9 @@ def main(argv=None) -> None:
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     tok = jnp.argmax(logits, axis=-1)[:, None]
     outs = [tok]
+    n_steps = args.gen - 1
     t0 = time.perf_counter()
-    for _ in range(args.gen):
+    for _ in range(n_steps):
         cache, logits = decode(params, cache, tok)
         tok = jnp.argmax(logits, axis=-1)[:, None]
         outs.append(tok)
@@ -82,10 +82,115 @@ def main(argv=None) -> None:
     gen = np.asarray(jnp.concatenate(outs, axis=1))
     assert not np.any(np.isnan(np.asarray(logits))), "NaN logits"
     print(f"prefill: {B}x{P} tokens in {t_prefill:.3f}s "
-          f"({B*P/t_prefill:.0f} tok/s)")
-    print(f"decode:  {args.gen} steps x {B} seqs in {t_decode:.3f}s "
-          f"({args.gen*B/t_decode:.1f} tok/s)")
-    print("sample:", gen[0, :16].tolist())
+          f"({B*P/t_prefill:.0f} tok/s, +1 sampled token/seq)")
+    if n_steps:
+        print(f"decode:  {n_steps} steps x {B} seqs in {t_decode:.3f}s "
+              f"({n_steps*B/t_decode:.1f} tok/s)")
+    print(f"total:   {args.gen} tokens/seq x {B} seqs")
+    print(f"sample ({gen.shape[1]} tokens):", gen[0, :16].tolist(),
+          "..." if gen.shape[1] > 16 else "")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    add_policy_arg(ap, default="pofx8")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route quantized matmuls through the fused Pallas "
+                         "PoFx/FxP kernels (interpret mode on CPU)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slots (legacy: fixed batch size)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to serve (default: 2x slots)")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32,
+                    help="tokens generated per request")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = off")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop token id (<0 = none; random-weight demos "
+                         "never stop early)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps fused into one scan")
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    help="virtual decode steps between request arrivals "
+                         "(0 = all at once)")
+    ap.add_argument("--prompt-bucket", type=int, default=1,
+                    help="round prompt lengths up to this multiple for "
+                         "prefill (bounds recompilation; attention "
+                         "families only)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="one-shot fixed-batch greedy loop (no engine)")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = smoke_cfg(cfg)
+    rcfg = RunConfig(remat="none")
+    model = build_model(cfg, rcfg, use_kernel=args.use_kernel)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = QuantPolicy.from_string(args.quant)
+    params = apply_policy(params, policy)
+    print(f"[{args.arch} quant={policy.to_string()} "
+          f"kernel={'pallas' if args.use_kernel else 'xla-lut'}]")
+    print(storage_report(params, policy))
+
+    if args.legacy or cfg.family == "encdec":
+        if not args.legacy:
+            print("(encdec: engine unsupported, using one-shot path)")
+        ignored = [f for f, on in (
+            ("--temperature", args.temperature != 0.0),
+            ("--top-k", args.top_k != 0),
+            ("--requests", args.requests != 0),
+            ("--arrival-gap", args.arrival_gap != 0.0),
+            ("--prompt-bucket", args.prompt_bucket > 1),
+            ("--eos-id", args.eos_id >= 0),
+            ("--chunk", args.chunk != 8)) if on]
+        if ignored:
+            print(f"(legacy path is greedy fixed-batch; ignoring "
+                  f"{', '.join(ignored)})")
+        _legacy_main(args, cfg, model, params)
+        return
+
+    P, G = args.prompt_len, args.gen
+    n_req = args.requests or 2 * args.batch
+    if n_req < 1 or G < 1 or P < 1:
+        ap.error("--requests/--gen/--prompt-len must be >= 1")
+    engine = ServeEngine(
+        model, params, n_slots=args.batch, max_len=P + G,
+        eos_id=args.eos_id if args.eos_id >= 0 else None,
+        chunk=args.chunk, prompt_bucket=args.prompt_bucket, seed=0)
+    rng = np.random.default_rng(1)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    requests = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, P),
+                max_new=G, sampling=sampling, arrival=i * args.arrival_gap)
+        for i in range(n_req)
+    ]
+    done = engine.run(requests)
+
+    stats = engine.stats()
+    n_prefill_tok = sum(len(s.context) for s in done)
+    n_gen = stats["generated_tokens"]
+    n_dec = stats["decode_tokens"]      # excludes prefill-sampled tokens
+    print(f"served {len(done)} requests on {args.batch} slots "
+          f"(chunk={args.chunk}, arrival gap={args.arrival_gap} steps)")
+    print(f"prefill: {n_prefill_tok} prompt tokens in "
+          f"{engine.prefill_time:.3f}s ({n_prefill_tok/engine.prefill_time:.0f}"
+          f" tok/s, +{stats['prefill_sampled_tokens']} sampled tokens)")
+    print(f"decode:  {engine.decode_steps} scan steps, {n_dec} tokens in "
+          f"{engine.decode_time:.3f}s ({n_dec/max(engine.decode_time,1e-9):.1f}"
+          f" tok/s)")
+    print(f"total:   {n_gen} generated tokens in {engine.total_time:.3f}s "
+          f"({n_gen/engine.total_time:.1f} tok/s end-to-end)")
+    s0 = done[0]
+    if any(len(s.out) > G for s in done):  # must survive `python -O`
+        raise RuntimeError("engine generated more than --gen tokens")
+    print(f"sample rid=0 ({len(s0.out)} tokens, {s0.finish_reason}):",
+          s0.out[:16], "..." if len(s0.out) > 16 else "")
 
 
 if __name__ == "__main__":

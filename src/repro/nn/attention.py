@@ -272,6 +272,13 @@ def decode_attention(q, k_cache, v_cache, pos, ctx, mode: str,
     layout churn cost ~2 TB/step at llama3-405b decode_32k; §Perf iter C).
     Plain softmax over S — GSPMD partitions the reductions over the
     seq-sharded cache into the flash-decoding combine.
+
+    ``pos`` is the valid-prefix length: a scalar (uniform batch, the
+    one-shot serve path) or a (B,) array of per-slot lengths (the
+    continuous-batching engine, where slots hold requests of different
+    ages). Entries at or beyond a slot's pos are masked, so KV written by
+    a previous occupant of the slot — or by a right-padded bucketed
+    prefill — is never read.
     """
     S = k_cache.shape[2]
     scale = q.shape[-1] ** -0.5
@@ -282,8 +289,8 @@ def decode_attention(q, k_cache, v_cache, pos, ctx, mode: str,
     qdt = k_cache.dtype if bf16_compute else jnp.float32
     s = jnp.einsum("bqgrd,bgsd->bgrqs", q.astype(qdt), k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(S) < pos
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    valid = jnp.arange(S)[None, :] < jnp.reshape(pos, (-1, 1))  # (B or 1, S)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgrqs,bgsd->bqgrd", p.astype(qdt), v_cache,
                    preferred_element_type=jnp.float32)
@@ -339,15 +346,24 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
             if cfg.qk_norm:
                 k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
             k = apply_rotary(k, cos, sin)
-            # heads-major cache (B, G, S, Dh): in-place update of one column
+            # heads-major cache (B, G, S, Dh): in-place update of one column.
+            # cache_pos is a scalar (uniform batch) or a (B,) array of
+            # per-slot write positions (continuous batching) — the array
+            # case vmaps the update so each slot writes at its own length.
             kdt = cache["k"].dtype
+            k_upd = jnp.swapaxes(k, 1, 2).astype(kdt)
+            v_upd = jnp.swapaxes(v, 1, 2).astype(kdt)
             zero = jnp.zeros((), jnp.int32)
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], jnp.swapaxes(k, 1, 2).astype(kdt),
-                (zero, zero, cache_pos, zero))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], jnp.swapaxes(v, 1, 2).astype(kdt),
-                (zero, zero, cache_pos, zero))
+            if getattr(cache_pos, "ndim", 0):
+                def put(c, u, p):
+                    return jax.lax.dynamic_update_slice(c, u, (zero, p, zero))
+                k_cache = jax.vmap(put)(cache["k"], k_upd, cache_pos)
+                v_cache = jax.vmap(put)(cache["v"], v_upd, cache_pos)
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k_upd, (zero, zero, cache_pos, zero))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v_upd, (zero, zero, cache_pos, zero))
             k_cache = ctx.constrain(k_cache, "batch", None, "kv_seq", "head_dim")
             v_cache = ctx.constrain(v_cache, "batch", None, "kv_seq", "head_dim")
             y = decode_attention(q, k_cache, v_cache, cache_pos + 1, ctx, mode,

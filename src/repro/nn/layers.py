@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantizers import QuantizedTensor, dequantize
-from repro.kernels.ops import quant_matmul
+from repro.kernels.ops import out_channel_scale, quant_matmul
 
 Param = Union[jax.Array, QuantizedTensor]
 
@@ -31,12 +31,15 @@ def matmul_param(x: jax.Array, w: Param, *, out_shape=None,
     """x:(..., k) @ w:(k, ...) with quantized-weight dispatch.
 
     ``w`` may have multiple output dims (e.g. (d_model, H, Dh)); pass
-    ``out_shape`` to reshape the flattened output.
+    ``out_shape`` to reshape the flattened output. Quantized weights must
+    carry an out-channel scale layout — a scale varying along the
+    contraction axis (codes axis 0) raises (see
+    ``repro.kernels.ops.out_channel_scale``; DESIGN.md §2).
     """
     if isinstance(w, QuantizedTensor):
         k = w.codes.shape[0]
         codes2 = w.codes.reshape(k, -1)
-        scale2 = jnp.broadcast_to(w.scale, w.codes.shape).reshape(k, -1)[:1]
+        scale2 = out_channel_scale(w.scale, w.codes.shape)
         w2 = QuantizedTensor(codes2, scale2, w.spec)
         y = quant_matmul(x, w2, use_kernel=use_kernel)
         tail = w.codes.shape[1:]
@@ -110,16 +113,17 @@ def dense_init(key, in_dim: int, out_dims, scale: Optional[float] = None,
 
 
 def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
-    ks = jax.random.split(key, 3)
     if is_gated(act):
+        ks = jax.random.split(key, 3)
         return {
             "wg": dense_init(ks[0], d_model, d_ff, dtype=dtype),
             "wu": dense_init(ks[1], d_model, d_ff, dtype=dtype),
             "wo": dense_init(ks[2], d_ff, d_model, dtype=dtype),
         }
+    ks = jax.random.split(key, 2)
     return {
         "wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
-        "wo": dense_init(ks[2], d_ff, d_model, dtype=dtype),
+        "wo": dense_init(ks[1], d_ff, d_model, dtype=dtype),
     }
 
 

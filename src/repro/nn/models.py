@@ -363,12 +363,21 @@ class LM:
             abstract, logical,
             is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
 
-    def prefill(self, params, tokens, *, cache, frames=None):
+    def prefill(self, params, tokens, *, cache, frames=None, length=None):
         """Run the full prompt, filling the cache. Returns (cache, last_logits).
 
         Implemented as forward + cache writes per layer; decode-shape dry-run
         only lowers decode_step, so prefill stays straightforward (chunked
         attention still applies).
+
+        ``length`` (scalar or (B,) int) marks the true prompt length when
+        ``tokens`` is right-padded to a bucket (the serving engine pads to
+        limit prefill recompilation): logits are gathered at ``length-1``
+        and ``cache["pos"]`` becomes the per-sequence length, so the junk
+        KV written for pad positions sits beyond every slot's valid prefix
+        and is masked (then progressively overwritten) during decode.
+        Attention-family models only — a right-padded prompt would pollute
+        an SSM recurrent state, which has no per-position mask.
         """
         cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
         B, Sq = tokens.shape
@@ -455,12 +464,21 @@ class LM:
             x, cache = self._hybrid_prefill(params, x, positions, cache, write_kv)
         x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
         w_un = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        last = x[:, -1]
+        if length is None:
+            last = x[:, -1]
+            pos = jnp.asarray(tokens.shape[1], jnp.int32)
+        else:
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "bucketed prefill (length=) is attention-family only: "
+                    "right-padding pollutes the SSM recurrent state")
+            pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+            last = jnp.take_along_axis(x, (pos - 1)[:, None, None], axis=1)[:, 0]
         if cfg.tie_embeddings:
             logits = matmul_param(last, jnp.swapaxes(param_value(w_un, x.dtype), 0, 1))
         else:
             logits = matmul_param(last, w_un, use_kernel=self.use_kernel)
-        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        cache["pos"] = pos
         return cache, logits
 
     def _hybrid_prefill(self, params, x, positions, cache, write_kv):
@@ -491,11 +509,16 @@ class LM:
         return x, cache
 
     def decode_step(self, params, cache, tokens):
-        """One decode step. tokens: (B, 1). Returns (new_cache, logits (B, V))."""
+        """One decode step. tokens: (B, 1). Returns (new_cache, logits (B, V)).
+
+        ``cache["pos"]`` is a scalar (uniform batch) or a (B,) array of
+        per-slot lengths (continuous batching); rotary positions, the KV
+        write position and the attention valid-mask all follow it per slot.
+        """
         cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
         B = tokens.shape[0]
         pos = cache["pos"]
-        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (B, 1))
         x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
         fam = cfg.family
         new_cache = dict(cache, pos=pos + 1)

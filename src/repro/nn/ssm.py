@@ -86,7 +86,10 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
     y = jnp.zeros((B, S, d), jnp.float32)
     for i in range(K):  # K is 4: unrolled taps, no conv primitive needed
         y = y + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
-    new_state = xp[:, S:]
+    # keep the cache dtype stable across steps: a decode cache initialized
+    # f32 must not silently become bf16 after the first step (the engine
+    # scans decode_step, and a lax.scan carry rejects the dtype flip)
+    new_state = xp[:, S:].astype(state.dtype)
     return (y + b.astype(jnp.float32)).astype(x.dtype), new_state
 
 

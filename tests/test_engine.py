@@ -1,0 +1,390 @@
+"""Continuous-batching engine + quantized-matmul scale-layout tests.
+
+Covers the serving engine (scheduler invariants, scan-decode vs per-step
+bit-equality, eviction/resume, EOS stopping, use_kernel smoke in Pallas
+interpret mode) and the scale-layout guards in matmul_param/quant_matmul
+(regression for the silent row-0 truncation of contraction-varying scales).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.quantizers import QuantSpec, QuantizedTensor, dequantize, quantize
+from repro.kernels.ops import out_channel_scale, quant_matmul
+from repro.launch.engine import (Request, SamplingParams, ServeEngine,
+                                 sample_tokens)
+from repro.nn.layers import matmul_param
+from repro.nn.models import apply_policy, build_model
+
+VOCAB = None  # set by fixture
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke(ARCHS["yi-9b"])
+    model = build_model(cfg, RunConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(i, n=8, vocab=512):
+    return np.random.RandomState(i).randint(0, vocab, n)
+
+
+def _req(i, vocab, max_new=5, temp=0.0, top_k=0, arrival=0.0, n=8):
+    return Request(rid=i, prompt=_prompt(i, n, vocab), max_new=max_new,
+                   sampling=SamplingParams(temperature=temp, top_k=top_k),
+                   arrival=arrival)
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk", 4)
+    kw.setdefault("seed", 0)
+    return ServeEngine(model, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_admit_finish_invariants(dense):
+    cfg, model, params = dense
+    eng = _engine(model, params)
+    reqs = [_req(i, cfg.vocab_size, max_new=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    finished = []
+    while eng.pending_rids or eng.active_rids:
+        eng.admit_ready()
+        active, pending = eng.active_rids, eng.pending_rids
+        # invariants: a rid is in at most one place; slots are conserved
+        assert len(set(active)) == len(active)
+        assert not (set(active) & set(pending))
+        assert len(active) + len(eng.free_slots) == eng.n_slots
+        assert len(active) <= eng.n_slots
+        finished += eng.step()
+    assert sorted(s.req.rid for s in finished) == [0, 1, 2, 3, 4]
+    for s in finished:
+        assert s.finish_reason == "length"
+        assert len(s.out) == 4
+        assert s.slot == -1
+
+
+def test_submit_validation(dense):
+    cfg, model, params = dense
+    eng = _engine(model, params, max_len=16)
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(_req(0, cfg.vocab_size, n=16))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(1, _prompt(1), max_new=0))
+    eng.submit(_req(2, cfg.vocab_size, n=4))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(_req(2, cfg.vocab_size, n=4))
+
+
+def test_max_new_clamped_to_cache_room(dense):
+    cfg, model, params = dense
+    eng = _engine(model, params, max_len=12, n_slots=1)
+    done = eng.run([_req(0, cfg.vocab_size, max_new=50, n=8)])
+    assert len(done[0].out) == 4  # 12 - 8: decode never writes past max_len
+
+
+def test_evict_readmit_resumes_identically(dense):
+    cfg, model, params = dense
+    reqs = lambda: [_req(i, cfg.vocab_size, max_new=7, temp=0.7, top_k=8)
+                    for i in range(3)]
+    ref = {s.req.rid: s.out
+           for s in _engine(model, params, chunk=3).run(reqs())}
+
+    eng = _engine(model, params, chunk=3)
+    for r in reqs():
+        eng.submit(r)
+    eng.admit_ready()
+    eng.step()
+    victim = eng.active_rids[0]
+    eng.evict(victim)
+    assert victim not in eng.active_rids
+    assert eng.pending_rids[0] == victim
+    assert len(eng.free_slots) == 1
+    while eng.pending_rids or eng.active_rids:
+        eng.admit_ready()
+        eng.step()
+    got = {rid: st.out for rid, st in eng._states.items()}
+    # resumed request: identical sample stream (keys fold absolute positions)
+    assert got == ref
+    assert eng._states[victim].n_evictions == 1
+    # decode-token accounting: one prefill-sampled token per ADMISSION
+    # (3 requests + 1 resume), the rest decode-generated
+    assert eng.n_prefill_sampled == 4
+    st = eng.stats()
+    assert st["decode_tokens"] == st["generated_tokens"] - 4
+
+
+def test_admit_skips_unarrived_queue_head(dense):
+    # regression: a not-yet-arrived head must not livelock run() when an
+    # already-arrived request sits behind it in a manually-built queue
+    cfg, model, params = dense
+    eng = _engine(model, params)
+    eng.submit(_req(0, cfg.vocab_size, max_new=2, arrival=50.0))
+    eng.submit(_req(1, cfg.vocab_size, max_new=2, arrival=0.0))
+    done = eng.run([])
+    assert sorted(s.req.rid for s in done) == [0, 1]
+    assert eng._states[1].admitted_at < eng._states[0].admitted_at
+
+
+# ---------------------------------------------------------------------------
+# Scan decode == per-step decode
+# ---------------------------------------------------------------------------
+
+
+def test_scan_decode_bit_identical_to_per_step(dense):
+    """The scan-fused chunk must be bit-identical to dispatching
+    model.decode_step + sampling one step at a time."""
+    cfg, model, params = dense
+    steps = 6
+    eng = _engine(model, params, chunk=steps)
+    for i in range(2):
+        eng.submit(_req(i, cfg.vocab_size, max_new=steps + 1, temp=0.5,
+                        top_k=16))
+    eng.admit_ready()
+
+    # reference FIRST (eng.step donates the cache buffers)
+    decode = jax.jit(model.decode_step)
+    cache = jax.tree.map(lambda x: x, eng.cache)
+    tok = eng._tok
+    ref_toks = []
+    for _ in range(steps):
+        pos = cache["pos"]
+        cache, logits = decode(params, cache, tok)
+        keys = jax.vmap(jax.random.fold_in)(eng._keys, pos)
+        nxt = sample_tokens(logits, keys,
+                            jnp.full((2,), 0.5, jnp.float32),
+                            jnp.full((2,), 16, jnp.int32))
+        ref_toks.append(np.asarray(nxt))
+        tok = nxt[:, None]
+        cache = dict(cache, pos=pos + 1)
+    ref = np.stack(ref_toks)
+
+    out = {s.req.rid: s.out for s in [st for st in eng.step(steps)]}
+    for rid, gen in out.items():
+        # gen[0] came from prefill; gen[1:] are the scan-decode tokens
+        np.testing.assert_array_equal(np.asarray(gen[1:]), ref[:, rid],
+                                      err_msg=f"rid {rid}")
+
+
+def test_chunk_size_and_slot_count_invariance(dense):
+    cfg, model, params = dense
+    mk = lambda: [_req(i, cfg.vocab_size, max_new=6, temp=0.7, top_k=8,
+                       arrival=float(i)) for i in range(3)]
+    outs = []
+    for slots, chunk in ((2, 1), (2, 5), (3, 4), (1, 4)):
+        eng = _engine(model, params, n_slots=slots, chunk=chunk)
+        outs.append({s.req.rid: s.out for s in eng.run(mk())})
+    assert all(o == outs[0] for o in outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# Stopping and sampling
+# ---------------------------------------------------------------------------
+
+
+def test_eos_stops_slot(dense):
+    cfg, model, params = dense
+    base = _engine(model, params).run([_req(0, cfg.vocab_size, max_new=5)])
+    full = base[0].out
+    eos = full[2]
+    done = _engine(model, params, eos_id=eos).run(
+        [_req(0, cfg.vocab_size, max_new=5)])
+    assert done[0].finish_reason == "eos"
+    assert done[0].out == full[:3]  # the EOS itself is emitted, then stop
+
+
+def test_sample_tokens_semantics():
+    logits = jnp.asarray(np.random.RandomState(0).normal(size=(3, 32)),
+                         jnp.float32)
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        jax.random.PRNGKey(0), jnp.arange(3))
+    argmax = np.asarray(jnp.argmax(logits, axis=-1))
+    # temperature 0 -> greedy, key-independent
+    np.testing.assert_array_equal(
+        np.asarray(sample_tokens(logits, keys, jnp.zeros(3), jnp.zeros(3, jnp.int32))),
+        argmax)
+    # top_k=1 -> greedy even at high temperature
+    np.testing.assert_array_equal(
+        np.asarray(sample_tokens(logits, keys, jnp.full(3, 5.0),
+                                 jnp.ones(3, jnp.int32))),
+        argmax)
+    # top_k masks everything outside the k best
+    top2 = np.argsort(np.asarray(logits), axis=-1)[:, -2:]
+    for trial in range(8):
+        k2 = jax.vmap(jax.random.fold_in, (None, 0))(
+            jax.random.PRNGKey(trial), jnp.arange(3))
+        got = np.asarray(sample_tokens(logits, k2, jnp.full(3, 2.0),
+                                       jnp.full(3, 2, jnp.int32)))
+        for b in range(3):
+            assert got[b] in top2[b]
+    # mixed per-slot params in one batch: slot 0 greedy, others sampled
+    mixed = np.asarray(sample_tokens(
+        logits, keys, jnp.asarray([0.0, 1.0, 1.0]), jnp.zeros(3, jnp.int32)))
+    assert mixed[0] == argmax[0]
+
+
+# ---------------------------------------------------------------------------
+# Bucketed prefill
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_length_matches_exact(dense):
+    cfg, model, params = dense
+    toks = jnp.asarray(_prompt(0, 6, cfg.vocab_size))[None]
+    cache_a = model.init_cache(1, 32)
+    _, lg_exact = model.prefill(params, toks, cache=cache_a)
+    padded = jnp.pad(toks, ((0, 0), (0, 10)))
+    cache_b = model.init_cache(1, 32)
+    cache_b, lg_pad = model.prefill(params, padded, cache=cache_b,
+                                    length=jnp.asarray([6]))
+    np.testing.assert_allclose(np.asarray(lg_pad, np.float32),
+                               np.asarray(lg_exact, np.float32),
+                               atol=2e-2, rtol=1e-2)
+    assert np.asarray(cache_b["pos"]).tolist() == [6]
+
+
+def test_engine_prompt_bucket_matches_exact(dense):
+    cfg, model, params = dense
+    mk = lambda: [_req(i, cfg.vocab_size, max_new=4, n=5 + i)
+                  for i in range(2)]
+    a = {s.req.rid: s.out
+         for s in _engine(model, params).run(mk())}
+    b = {s.req.rid: s.out
+         for s in _engine(model, params, prompt_bucket=8).run(mk())}
+    assert a == b
+
+
+def test_prompt_bucket_clamped_to_max_len(dense):
+    # bucket-rounded prefill length must not exceed the cache (regression:
+    # Pb=16 > max_len=15 crashed inside write_kv with a shape error)
+    cfg, model, params = dense
+    eng = _engine(model, params, max_len=15, n_slots=1, prompt_bucket=16)
+    done = eng.run([_req(0, cfg.vocab_size, max_new=2, n=13)])
+    assert len(done[0].out) == 2
+
+
+def test_prefill_length_rejected_for_ssm():
+    cfg = smoke(ARCHS["falcon-mamba-7b"])
+    model = build_model(cfg, RunConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(_prompt(0, 8, cfg.vocab_size))[None]
+    with pytest.raises(ValueError, match="SSM"):
+        model.prefill(params, toks, cache=model.init_cache(1, 16),
+                      length=jnp.asarray([4]))
+    with pytest.raises(ValueError, match="prompt_bucket"):
+        ServeEngine(model, params, n_slots=1, max_len=16, prompt_bucket=4)
+
+
+# ---------------------------------------------------------------------------
+# Other families through the engine (cache scatter generality)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "moonshot-v1-16b-a3b",
+                                  "zamba2-1.2b"])
+def test_engine_other_families(arch):
+    cfg = smoke(ARCHS[arch])
+    model = build_model(cfg, RunConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, n_slots=2, max_len=24, chunk=3)
+    done = eng.run([_req(i, cfg.vocab_size, max_new=4, arrival=float(2 * i))
+                    for i in range(3)])
+    for s in done:
+        assert len(s.out) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in s.out)
+
+
+def test_engine_rejects_encdec():
+    cfg = smoke(ARCHS["whisper-medium"])
+    model = build_model(cfg, RunConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        ServeEngine(model, params, n_slots=1, max_len=16)
+
+
+# ---------------------------------------------------------------------------
+# use_kernel serving smoke (Pallas interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_use_kernel_serving_smoke():
+    cfg = smoke(ARCHS["yi-9b"])
+    model = build_model(cfg, RunConfig(remat="none"), use_kernel=True)
+    params = apply_policy(model.init(jax.random.PRNGKey(0)), "pofx8")
+    eng = ServeEngine(model, params, n_slots=2, max_len=16, chunk=2)
+    done = eng.run([_req(i, cfg.vocab_size, max_new=3, n=6)
+                    for i in range(2)])
+    for s in done:
+        assert len(s.out) == 3
+        assert all(0 <= t < cfg.padded_vocab for t in s.out)
+
+
+# ---------------------------------------------------------------------------
+# Scale-layout guards (regression: contraction-varying scales corrupted
+# output silently instead of raising)
+# ---------------------------------------------------------------------------
+
+
+def test_out_channel_scale_layouts():
+    codes_shape = (16, 4, 8)
+    for shape in ((), (1,), (8,), (1, 1, 8), (1, 4, 8), (1, 4, 1)):
+        s = out_channel_scale(jnp.ones(shape), codes_shape)
+        assert s.shape == (1, 32)
+    with pytest.raises(ValueError, match="contraction"):
+        out_channel_scale(jnp.ones((16, 1, 1)), codes_shape)
+    with pytest.raises(ValueError, match="rank"):
+        out_channel_scale(jnp.ones((1, 16, 4, 8)), codes_shape)
+    with pytest.raises(ValueError, match="broadcast"):
+        out_channel_scale(jnp.ones((3, 8)), codes_shape)
+
+
+def test_matmul_param_rejects_contraction_varying_scale():
+    w = np.random.RandomState(0).normal(size=(16, 8)).astype(np.float32)
+    qt = quantize(jnp.asarray(w), QuantSpec(kind="pofx", N=8, ES=2), axis=-1)
+    x = jnp.asarray(np.random.RandomState(1).normal(size=(2, 16)), jnp.float32)
+    # valid per-output-channel scale: matches the dequantize reference
+    y = matmul_param(x, qt)
+    ref = jnp.dot(x.astype(jnp.float32),
+                  dequantize(qt, jnp.float32))
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref),
+                               atol=1e-2, rtol=1e-2)
+    # per-input-channel scale (varies along the contraction axis): raise,
+    # don't silently keep row 0
+    bad = QuantizedTensor(qt.codes, jnp.ones((16, 1), jnp.float32), qt.spec)
+    with pytest.raises(ValueError, match="contraction"):
+        matmul_param(x, bad)
+    # 3-D weights with a stacked scale over the contraction axis
+    w3 = np.random.RandomState(2).normal(size=(16, 2, 4)).astype(np.float32)
+    qt3 = quantize(jnp.asarray(w3), QuantSpec(kind="fxp", M=8, F=7), axis=-1)
+    assert matmul_param(x, qt3).shape == (2, 2, 4)
+    bad3 = QuantizedTensor(qt3.codes, jnp.ones((16, 1, 1), jnp.float32),
+                           qt3.spec)
+    with pytest.raises(ValueError, match="contraction"):
+        matmul_param(x, bad3)
+
+
+@pytest.mark.parametrize("kind", ["pofx", "fxp"])
+def test_quant_matmul_kernel_rejects_bad_scale(kind):
+    spec = (QuantSpec(kind="pofx", N=8, ES=2) if kind == "pofx"
+            else QuantSpec(kind="fxp", M=8, F=7))
+    w = np.random.RandomState(0).normal(size=(16, 8)).astype(np.float32)
+    qt = quantize(jnp.asarray(w), spec, axis=-1)
+    x = jnp.asarray(np.random.RandomState(1).normal(size=(2, 16)), jnp.float32)
+    ok = quant_matmul(x, qt, use_kernel=True)
+    ref = jnp.dot(x, dequantize(qt, jnp.float32))
+    np.testing.assert_allclose(np.asarray(ok, np.float32), np.asarray(ref),
+                               atol=0.35, rtol=0.1)
+    bad = QuantizedTensor(qt.codes, jnp.ones((16, 1), jnp.float32), qt.spec)
+    with pytest.raises(ValueError, match="contraction"):
+        quant_matmul(x, bad, use_kernel=True)
