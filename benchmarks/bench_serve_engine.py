@@ -10,9 +10,19 @@ all. Three mixes over the same request set:
   ragged    — burst arrivals but 2x-spread generation lengths (slots
               free at different times; continuous refill does the work)
 
+plus a long-context mix for the quantized KV cache (DESIGN.md §8):
+
+  longctx   — staggered arrivals over long prompts, served three ways:
+              bf16 cache, quantized cache via the XLA fallback, quantized
+              cache via the fused Pallas flash-decode kernel. Rows record
+              the modeled decode KV-cache HBM bytes/token (the
+              S-proportional roofline term) so the 2x+ bandwidth win shows
+              up in the perf trajectory, and the kernel/fallback runs are
+              checked token-identical under greedy sampling.
+
 Rows land in experiments/bench/serve_engine.csv. Run standalone
-(``python -m benchmarks.bench_serve_engine [--use-kernel]``) or via
-``benchmarks.run``.
+(``python -m benchmarks.bench_serve_engine [--use-kernel]
+[--kv-quant fxp8]``) or via ``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -22,8 +32,10 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.policy import format_spec, parse_kv_spec
 from repro.launch.engine import Request, SamplingParams, ServeEngine
-from repro.nn.models import apply_policy, build_model
+from repro.nn.models import (apply_policy, build_model,
+                             kv_decode_bytes_per_token)
 
 from .common import write_csv
 
@@ -33,6 +45,8 @@ SLOTS = 4
 PROMPT = 32
 GEN = 16
 CHUNK = 8
+LONG_PROMPT = 96          # "long" for a CPU smoke model; the modeled
+LONG_GEN = 16             # bytes/token ratio is context-length-invariant
 
 
 def _mix_requests(mix: str, vocab: int) -> list:
@@ -51,7 +65,86 @@ def _mix_requests(mix: str, vocab: int) -> list:
     return reqs
 
 
-def run(use_kernel: bool = False, quant: str = "pofx8"):
+def _longctx_requests(vocab: int) -> list:
+    rng = np.random.default_rng(3)
+    return [Request(rid=i, prompt=rng.integers(0, vocab, LONG_PROMPT),
+                    max_new=LONG_GEN, sampling=SamplingParams(),  # greedy
+                    arrival=float(i * (LONG_GEN // 2)))
+            for i in range(N_REQ)]
+
+
+def _run_longctx(cfg, params, kv_spec, kv_kernel, use_kernel):
+    model = build_model(cfg, RunConfig(remat="none"), use_kernel=use_kernel,
+                        kv_spec=kv_spec, kv_kernel=kv_kernel)
+    engine = ServeEngine(model, params, n_slots=SLOTS,
+                         max_len=LONG_PROMPT + LONG_GEN, chunk=CHUNK, seed=0)
+    done = engine.run(_longctx_requests(cfg.vocab_size))
+    st = engine.stats()
+    outs = {s.req.rid: list(s.out) for s in done}
+    return st, outs
+
+
+def _longctx_kv_spec(kv_quant: str):
+    tok = (kv_quant or "").strip().lower()
+    kv_spec = None if tok in ("none", "off") else parse_kv_spec(tok)
+    if kv_spec is None:
+        # "bf16"/"none" would run the bf16 cache three times and record it
+        # under quantized-variant labels, polluting the perf trajectory
+        raise ValueError(
+            "the longctx mix measures the quantized KV cache: --kv-quant "
+            f"must be a byte-wide fxp/pofx spec (e.g. fxp8, pofx8es2), "
+            f"got {kv_quant!r}")
+    return kv_spec
+
+
+def run_longctx(cfg, params, kv_spec, use_kernel: bool):
+    """Long-context arrival mix: bf16 cache vs quantized cache (XLA
+    fallback and fused kernel). Returns (rows, claims)."""
+    ctx_len = LONG_PROMPT + LONG_GEN
+    bf16 = kv_decode_bytes_per_token(cfg, ctx_len, None)
+    rows, outs_by_variant = [], {}
+    variants = [("bf16", None, False),
+                ("xla-fallback", kv_spec, False),
+                ("fused-kernel", kv_spec, True)]
+    for name, spec, kern in variants:
+        st, outs = _run_longctx(cfg, params, spec, kern, use_kernel)
+        if spec is not None:   # identity check is kernel-vs-fallback only
+            outs_by_variant[name] = outs
+        traffic = kv_decode_bytes_per_token(cfg, ctx_len, spec)
+        rows.append({
+            "mix": "longctx", "arch": ARCH, "quant": "(shared)",
+            "use_kernel": use_kernel, "slots": SLOTS, "requests": N_REQ,
+            "prompt_len": LONG_PROMPT, "gen": LONG_GEN,
+            "generated_tokens": st["generated_tokens"],
+            "decode_steps": st["decode_steps"],
+            "decode_tok_per_s": round(
+                st["decode_tokens"] / max(st["decode_time_s"], 1e-9), 2),
+            "prefill_s": round(st["prefill_time_s"], 4),
+            "decode_s": round(st["decode_time_s"], 4),
+            "kv_variant": name,
+            "kv_spec": format_spec(spec) if spec else "bf16",
+            "kv_hbm_bytes_per_token": traffic["code_bytes"],
+            "kv_scale_bytes_per_step": traffic["scale_bytes"],
+        })
+    quant_bytes = rows[1]["kv_hbm_bytes_per_token"]
+    identical = outs_by_variant["xla-fallback"] == outs_by_variant["fused-kernel"]
+    if not identical:
+        # must be loud: the acceptance contract is token-identity between
+        # the fused kernel and the quantize/dequantize fallback
+        raise AssertionError(
+            "kv flash-decode kernel and XLA fallback disagree under greedy "
+            f"sampling: {outs_by_variant['fused-kernel']} vs "
+            f"{outs_by_variant['xla-fallback']}")
+    claims = {
+        "kv_hbm_bytes_ratio": round(bf16["code_bytes"] / quant_bytes, 3),
+        "kv_kernel_token_identical": identical,
+    }
+    return rows, claims
+
+
+def run(use_kernel: bool = False, quant: str = "pofx8",
+        kv_quant: str = "fxp8"):
+    kv_spec = _longctx_kv_spec(kv_quant)   # fail fast, before engine work
     cfg = smoke(ARCHS[ARCH])
     model = build_model(cfg, RunConfig(remat="none"), use_kernel=use_kernel)
     params = apply_policy(model.init(jax.random.PRNGKey(0)), quant)
@@ -89,13 +182,19 @@ def run(use_kernel: bool = False, quant: str = "pofx8"):
             "prefill_s": round(st["prefill_time_s"], 4),
             "decode_s": round(st["decode_time_s"], 4),
         })
-    write_csv("serve_engine", rows)
     by_mix = {r["mix"]: r["decode_tok_per_s"] for r in rows}
     claims = {
         f"decode_tok_per_s[{m}]": v for m, v in by_mix.items()
     }
     claims["staggered_vs_burst_ratio"] = round(
         by_mix["staggered"] / max(by_mix["burst"], 1e-9), 3)
+    # persist the arrival mixes before the longctx runs: the loud
+    # kernel-vs-fallback identity assertion must not discard them
+    write_csv("serve_engine", rows)
+    long_rows, long_claims = run_longctx(cfg, params, kv_spec, use_kernel)
+    rows += long_rows
+    claims.update(long_claims)
+    write_csv("serve_engine", rows)
     return rows, claims
 
 
@@ -103,8 +202,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--quant", default="pofx8")
+    ap.add_argument("--kv-quant", default="fxp8",
+                    help="KV-cache format for the longctx mix (fxp/pofx, "
+                         "byte-wide codes)")
     args = ap.parse_args(argv)
-    rows, claims = run(use_kernel=args.use_kernel, quant=args.quant)
+    rows, claims = run(use_kernel=args.use_kernel, quant=args.quant,
+                       kv_quant=args.kv_quant)
     for r in rows:
         print(r)
     for k, v in claims.items():

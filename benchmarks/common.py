@@ -63,9 +63,11 @@ def write_csv(name: str, rows: List[Dict]) -> str:
     path = os.path.join(OUT_DIR, f"{name}.csv")
     if not rows:
         return path
-    keys = list(rows[0].keys())
+    # union of keys in first-seen order: mixes may report extra columns
+    # (e.g. the longctx KV-traffic fields) without breaking the writer
+    keys = list(dict.fromkeys(k for r in rows for k in r))
     with open(path, "w", newline="") as f:
-        wr = csv.DictWriter(f, fieldnames=keys)
+        wr = csv.DictWriter(f, fieldnames=keys, restval="")
         wr.writeheader()
         for r in rows:
             wr.writerow(r)

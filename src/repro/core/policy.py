@@ -44,17 +44,28 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .quantizers import QuantSpec, QuantizedTensor, storage_bits
+from .quantizers import (QuantSpec, QuantizedTensor, storage_bits,
+                         validate_kv_spec)
 
 __all__ = [
     "parse_spec",
     "format_spec",
     "QuantPolicy",
     "PRESETS",
+    "KV_RULE",
+    "parse_kv_spec",
     "storage_report",
     "policy_from_pareto",
     "add_policy_arg",
+    "add_kv_quant_arg",
+    "resolve_kv_spec",
 ]
+
+# Reserved rule name: "kv=<spec>" configures the decode KV-cache format
+# instead of matching a parameter path (DESIGN.md §8). It rides in the same
+# policy string ("attn/*=pofx8es2,kv=fxp8,*=bf16") so one --quant value can
+# describe weights AND cache, but it never participates in path matching.
+KV_RULE = "kv"
 
 _SCALE_TOKENS = {"channel": "channel_pow2", "tensor": "tensor_pow2",
                  "none": "none"}
@@ -70,8 +81,14 @@ GRAMMAR_HELP = (
     "@channel|@tensor|@none scale suffix; policy grammar: one spec "
     "(uniform) or comma-separated glob=spec rules matched first-wins "
     "against parameter paths (e.g. 'attn/*=pofx8es2,mlp/*=fxp8f7,*=bf16'), "
-    "or a preset name (%s)"
+    "plus an optional 'kv=<spec>' rule naming the decode KV-cache format "
+    "(fxp/pofx, byte-wide codes), or a preset name (%s)"
 )
+
+
+def parse_kv_spec(s: str) -> Optional[QuantSpec]:
+    """Parse + validate one KV-cache spec string ("keep"/bf16/fp32 -> None)."""
+    return validate_kv_spec(parse_spec(s))
 
 
 def parse_spec(s: str) -> Optional[QuantSpec]:
@@ -147,7 +164,9 @@ class QuantPolicy:
 
     A spec of None ("keep") leaves matching tensors untouched. Paths that
     match no rule are also left untouched, so a trailing "*" rule is the
-    uniform fallback.
+    uniform fallback. A rule whose pattern is the reserved name ``kv`` is
+    not a path rule at all: it names the decode KV-cache format
+    (``kv_spec``) and is skipped by parameter matching.
     """
     rules: Tuple[Tuple[str, Optional[QuantSpec]], ...]
 
@@ -163,13 +182,22 @@ class QuantPolicy:
         if text in PRESETS:
             text = PRESETS[text]
         rules: List[Tuple[str, Optional[QuantSpec]]] = []
+        seen_kv = False
         for part in text.split(","):
             part = part.strip()
             if not part:
                 continue
             if "=" in part:
                 pat, _, spec_s = part.partition("=")
-                rules.append((pat.strip(), parse_spec(spec_s)))
+                pat = pat.strip()
+                if pat == KV_RULE:
+                    if seen_kv:
+                        raise ValueError(
+                            f"duplicate kv= rule in policy {s!r}")
+                    seen_kv = True
+                    rules.append((KV_RULE, validate_kv_spec(parse_spec(spec_s))))
+                else:
+                    rules.append((pat, parse_spec(spec_s)))
             else:
                 # bare spec: uniform sugar, equivalent to "*=<spec>"
                 rules.append(("*", parse_spec(part)))
@@ -183,9 +211,23 @@ class QuantPolicy:
         return ",".join(f"{pat}={format_spec(spec)}"
                         for pat, spec in self.rules)
 
-    def match_rule(self, name: str) -> Optional[Tuple[str, Optional[QuantSpec]]]:
-        """First (pattern, spec) rule matching a "/"-joined parameter path."""
+    @property
+    def kv_spec(self) -> Optional[QuantSpec]:
+        """The decode KV-cache format from a ``kv=<spec>`` rule (or None)."""
         for pat, spec in self.rules:
+            if pat == KV_RULE:
+                return spec
+        return None
+
+    def match_rule(self, name: str) -> Optional[Tuple[str, Optional[QuantSpec]]]:
+        """First (pattern, spec) rule matching a "/"-joined parameter path.
+
+        The reserved ``kv`` rule configures the cache, not a parameter, and
+        never matches a path.
+        """
+        for pat, spec in self.rules:
+            if pat == KV_RULE:
+                continue
             if _match_one(pat, name):
                 return (pat, spec)
         return None
@@ -204,6 +246,9 @@ PRESETS: Dict[str, str] = {
     "uniform-fxp8": "*=fxp8f7",
     "uniform-posit8": "*=posit8es2",
     "paper-table6": "embed=bf16,unembed=bf16,*=pofx8es2",
+    # Table-6 weights + the quantized decode KV cache (DESIGN.md §8): the
+    # whole serving HBM story — weight codes AND cache codes — in one string.
+    "paper-table6-kv8": "embed=bf16,unembed=bf16,kv=fxp8,*=pofx8es2",
 }
 
 
@@ -340,3 +385,29 @@ def add_policy_arg(parser, default: str = "pofx8es2", flag: str = "--quant",
     if extra_help:
         help_text = f"{extra_help}; {help_text}"
     parser.add_argument(flag, default=default, help=help_text)
+
+
+def add_kv_quant_arg(parser, default: str = "auto",
+                     flag: str = "--kv-quant") -> None:
+    """Register the shared decode-KV-cache format argument.
+
+    "auto" defers to the policy string's ``kv=`` rule (none -> unquantized
+    bf16 cache); "none"/"bf16" force an unquantized cache; anything else is
+    one spec (``parse_kv_spec``: fxp/pofx, byte-wide codes), e.g. "fxp8" or
+    "pofx8es2".
+    """
+    parser.add_argument(
+        flag, default=default,
+        help="decode KV-cache format: auto (use the policy's kv= rule), "
+             "none/bf16 (unquantized), or one byte-wide fxp/pofx spec "
+             "(e.g. fxp8, pofx8es2); see DESIGN.md §8")
+
+
+def resolve_kv_spec(kv_arg: str, policy: "QuantPolicy") -> Optional[QuantSpec]:
+    """Combine a --kv-quant value with a policy's kv= rule (flag wins)."""
+    tok = (kv_arg or "auto").strip().lower()
+    if tok == "auto":
+        return policy.kv_spec
+    if tok in ("none", "off"):
+        return None
+    return parse_kv_spec(tok)

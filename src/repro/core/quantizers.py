@@ -33,7 +33,9 @@ from . import normalized_posit as _np_
 from . import posit as _posit
 from .pofx import pofx_norm_lut
 
-__all__ = ["QuantSpec", "QuantizedTensor", "quantize", "dequantize", "storage_bits"]
+__all__ = ["QuantSpec", "QuantizedTensor", "quantize", "dequantize",
+           "storage_bits", "validate_kv_spec", "kv_code_dtype", "kv_quantize",
+           "kv_dequantize"]
 
 _KINDS = ("fp32", "bf16", "fxp", "posit", "pofx")
 
@@ -131,6 +133,23 @@ def quantize(w, spec: QuantSpec, axis: Optional[int] = None) -> QuantizedTensor:
     return QuantizedTensor(codes.astype(spec.code_dtype()), scale, spec)
 
 
+def _codes_to_values(codes, spec: QuantSpec) -> jax.Array:
+    """Integer codes -> unscaled float values through the FxP datapath.
+
+    The ONE copy of the hardware decode both the weight path (dequantize)
+    and the KV-cache path (kv_dequantize, and tile-wise the flash-decode
+    kernel) must agree on bit-for-bit: fxp is a two's-complement shift;
+    pofx goes stored posit -> bit-level LUT -> FxP(M, M-1) -> value.
+    """
+    if spec.kind == "fxp":
+        return _fxp.fxp_dequantize(codes, spec.F)
+    if spec.kind == "pofx":
+        lut = jnp.asarray(pofx_norm_lut(spec.N, spec.ES, spec.M, spec.rounding))
+        fxp_codes = jnp.take(lut, codes.astype(jnp.int32), axis=0)
+        return _fxp.fxp_dequantize(fxp_codes, spec.M - 1)
+    raise ValueError(f"no FxP decode path for kind {spec.kind!r}")
+
+
 def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
     """Recover float values as the *hardware* would see them.
 
@@ -140,14 +159,10 @@ def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
     spec = qt.spec
     if spec.kind in ("fp32", "bf16"):
         return qt.codes.astype(dtype)
-    if spec.kind == "fxp":
-        v = _fxp.fxp_dequantize(qt.codes, spec.F)
-    elif spec.kind == "posit":
+    if spec.kind == "posit":
         v = _posit.posit_decode(qt.codes, spec.N, spec.ES)
-    else:  # pofx
-        lut = jnp.asarray(pofx_norm_lut(spec.N, spec.ES, spec.M, spec.rounding))
-        fxp_codes = jnp.take(lut, qt.codes.astype(jnp.int32), axis=0)
-        v = _fxp.fxp_dequantize(fxp_codes, spec.M - 1)
+    else:  # fxp / pofx
+        v = _codes_to_values(qt.codes, spec)
     return (v * qt.scale).astype(dtype)
 
 
@@ -161,6 +176,82 @@ def fxp_view(qt: QuantizedTensor):
         codes = jnp.take(lut, qt.codes.astype(jnp.int32), axis=0).astype(jnp.int8)
         return codes, qt.scale * (1.0 / (1 << (spec.M - 1)))
     raise ValueError(f"no FxP view for kind {spec.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV cache — elementwise code path for 4D (B, G, S, Dh) tensors
+# ---------------------------------------------------------------------------
+#
+# The decode KV cache stores quantization *codes* (one byte-wide lane per
+# element, streamed from HBM by kernels.kv_flash_decode) next to a STATIC
+# per-head-dim-channel normalizer scale leaf. The scale must not depend on
+# the data written so far: quantize-on-write is lossy, and the engine's
+# evict -> re-prefill resume is bit-identical only because re-quantizing the
+# same float always yields the same code — a running (data-dependent) scale
+# would re-scale history and corrupt resumed streams (DESIGN.md §8).
+# Unlike the weight path there is no QuantizedTensor wrapper here: cache
+# leaves must flatten 1:1 against ``LM.cache_logical`` for the engine's slot
+# scatter, so codes and scale travel as sibling dict leaves.
+
+
+def validate_kv_spec(spec: Optional[QuantSpec]) -> Optional[QuantSpec]:
+    """Check a spec is usable as a KV-cache format; returns it (or None).
+
+    bf16/fp32 mean "unquantized cache" and normalize to None. Quantized
+    caches require byte-wide codes (stored_bits <= 8) of a kind with an FxP
+    decode path the kernel implements: fxp or pofx.
+    """
+    if spec is None or spec.kind in ("bf16", "fp32"):
+        return None
+    if spec.kind not in ("fxp", "pofx"):
+        raise ValueError(
+            f"kv cache format must be fxp or pofx (got {spec.kind!r}): the "
+            "flash-decode kernel dequantizes through the FxP datapath")
+    if spec.stored_bits > 8:
+        raise ValueError(
+            f"kv cache codes must be byte-wide (stored_bits <= 8, got "
+            f"{spec.stored_bits}): the cache streams uint8/int8 code tiles")
+    if spec.kind == "pofx" and spec.rounding != "trunc":
+        raise ValueError(
+            f"kv cache pofx specs must use trunc rounding (got "
+            f"{spec.rounding!r}): the flash-decode kernel's bit-level VPU "
+            "decode truncates, and the XLA fallback must match it "
+            "code-for-code")
+    return spec
+
+
+def kv_code_dtype(spec: QuantSpec):
+    """Cache code dtype: int8 two's-complement for fxp, uint8 posit codes."""
+    return jnp.int8 if spec.kind == "fxp" else jnp.uint8
+
+
+def kv_quantize(x, spec: QuantSpec, scale) -> jax.Array:
+    """Quantize K/V values into cache codes. Elementwise over any shape.
+
+    ``scale`` is the static per-head-dim-channel normalizer leaf (typically
+    (B, G, 1, Dh), broadcastable against ``x``); values outside the format's
+    range after normalization saturate, exactly as the weight path does.
+    """
+    wn = _as_f32(x) / scale
+    if spec.kind == "fxp":
+        return _fxp.fxp_quantize(wn, spec.M, spec.F).astype(jnp.int8)
+    if spec.kind != "pofx":
+        raise ValueError(f"no kv code path for kind {spec.kind!r}")
+    if spec.path == "via_fxp":
+        wn = _fxp.fxp_dequantize(_fxp.fxp_quantize(wn, spec.M, spec.M - 1),
+                                 spec.M - 1)
+    return _np_.norm_encode(wn, spec.N, spec.ES).astype(jnp.uint8)
+
+
+def kv_dequantize(codes, spec: QuantSpec, scale, dtype=jnp.float32) -> jax.Array:
+    """Recover K/V values from cache codes (the XLA fallback / oracle path).
+
+    This is the same math ``kernels.kv_flash_decode`` runs tile-wise in
+    VMEM: codes -> FxP two's complement -> value * scale. It shares
+    ``_codes_to_values`` with the weight path so the decode the
+    kernel-vs-fallback and evict-resume contracts depend on has one copy.
+    """
+    return (_codes_to_values(codes, spec) * scale).astype(dtype)
 
 
 def storage_bits(qt: QuantizedTensor) -> int:

@@ -1,8 +1,50 @@
 """repro.kernels — Pallas TPU kernels for the PoFx hot path.
 
-pofx_decode: VPU bit-parallel Algorithm-1 decode (posit codes -> FxP int8)
-pofx_matmul: fused Move&Store kernel (decode in VMEM -> MXU matmul)
-fxp_matmul:  int8 x int8 -> int32 MAC (the paper's FxP baseline)
-ref:         pure-jnp oracles; every kernel is allclose-tested against them.
+pofx_decode:     VPU bit-parallel Algorithm-1 decode (posit codes -> FxP int8)
+pofx_matmul:     fused Move&Store kernel (decode in VMEM -> MXU matmul)
+fxp_matmul:      int8 x int8 -> int32 MAC (the paper's FxP baseline)
+kv_flash_decode: fused quantized-KV-cache flash-decode attention (uint8/int8
+                 code tiles stream from HBM, dequantize on the VPU in VMEM,
+                 online-softmax against them — full-precision K/V never
+                 round-trips through HBM)
+ref:             pure-jnp oracles; every kernel is allclose-tested against them.
+
+Shared helpers (used by every matmul-shaped kernel in this package):
+
+``vmem_scratch(shape, dtype)`` allocates a VMEM scratch accumulator, and
+``DEFAULT_BLOCKS`` / ``default_blocks()`` is the one (bm, bn, bk) block table
+keyed by backend — MXU-aligned multiples of 128 on TPU, smaller tiles for the
+CPU interpreter (less padding on smoke-sized shapes, same numerics contract).
 """
-from .ops import fxp_matmul, pofx_decode, pofx_matmul, quant_matmul  # noqa: F401
+import jax as _jax
+import jax.numpy as _jnp
+
+# (bm, bn, bk) matmul block shapes per backend. TPU: multiples of 128 on
+# every contracted/lane dim for MXU alignment; CPU (interpret mode) and GPU
+# use smaller tiles so smoke-sized operands pad less.
+DEFAULT_BLOCKS = {
+    "tpu": (256, 256, 512),
+    "cpu": (128, 128, 256),
+    "gpu": (128, 128, 256),
+}
+
+
+def default_blocks(backend: str | None = None) -> tuple:
+    """The (bm, bn, bk) block table entry for ``backend`` (default: the
+    current jax backend; unknown backends get the TPU entry)."""
+    return DEFAULT_BLOCKS.get(backend or _jax.default_backend(),
+                              DEFAULT_BLOCKS["tpu"])
+
+
+def vmem_scratch(shape, dtype=_jnp.float32):
+    """A VMEM scratch-buffer spec for ``pl.pallas_call(scratch_shapes=...)``.
+
+    Imported lazily so that merely importing repro.kernels never pulls the
+    TPU-specific pallas module on backends that lack it.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(tuple(shape), dtype)
+
+
+from .ops import fxp_matmul, pofx_decode, pofx_matmul, quant_matmul  # noqa: F401,E402
+from .kv_flash_decode import kv_flash_decode  # noqa: F401,E402

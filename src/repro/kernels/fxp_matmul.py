@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fxp_matmul"]
+from . import default_blocks, vmem_scratch
 
-DEFAULT_BLOCKS = (256, 256, 512)
+__all__ = ["fxp_matmul"]
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
@@ -34,11 +34,13 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
 
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
-def fxp_matmul(a: jax.Array, b: jax.Array, blocks=DEFAULT_BLOCKS,
+def fxp_matmul(a: jax.Array, b: jax.Array, blocks=None,
                interpret: bool | None = None) -> jax.Array:
     """a:(m,k) int8 @ b:(k,n) int8 -> (m,n) int32."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    if blocks is None:
+        blocks = default_blocks()
     m, kdim = a.shape
     _, n = b.shape
     bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
@@ -46,7 +48,6 @@ def fxp_matmul(a: jax.Array, b: jax.Array, blocks=DEFAULT_BLOCKS,
     ap = jnp.pad(a, ((0, pm), (0, pk)))
     bp = jnp.pad(b, ((0, pk), (0, pn)))
     grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
-    from jax.experimental.pallas import tpu as pltpu
     out = pl.pallas_call(
         functools.partial(_kernel, nk=grid[2]),
         grid=grid,
@@ -56,7 +57,7 @@ def fxp_matmul(a: jax.Array, b: jax.Array, blocks=DEFAULT_BLOCKS,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        scratch_shapes=[vmem_scratch((bm, bn), jnp.int32)],
         interpret=interpret,
     )(ap, bp)
     return out[:m, :n]

@@ -27,12 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.pofx import pofx_norm_lut
+from . import default_blocks, vmem_scratch
 from .ref import decode_norm_to_fxp
 
 __all__ = ["pofx_matmul"]
-
-# MXU-aligned defaults: multiples of 128 on every contracted/lane dim.
-DEFAULT_BLOCKS = (256, 256, 512)  # (bm, bn, bk)
 
 
 def _kernel(x_ref, w_ref, s_ref, lut_ref, o_ref, acc_ref, *, N, ES, M, nk, decode_mode):
@@ -65,12 +63,14 @@ def _kernel(x_ref, w_ref, s_ref, lut_ref, o_ref, acc_ref, *, N, ES, M, nk, decod
 @functools.partial(jax.jit, static_argnames=("N", "ES", "M", "blocks", "decode_mode",
                                              "interpret", "out_dtype"))
 def pofx_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array,
-                N: int, ES: int, M: int = 8, blocks=DEFAULT_BLOCKS,
+                N: int, ES: int, M: int = 8, blocks=None,
                 decode_mode: str = "bitlevel", interpret: bool | None = None,
                 out_dtype=jnp.float32) -> jax.Array:
     """x:(m,k) @ decode(codes:(k,n)) * scale:(n,) -> (m,n)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    if blocks is None:
+        blocks = default_blocks()
     m, kdim = x.shape
     k2, n = codes.shape
     if kdim != k2:
@@ -98,12 +98,7 @@ def pofx_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], cp.shape[1]), out_dtype),
-        scratch_shapes=[_vmem_scratch((bm, bn))],
+        scratch_shapes=[vmem_scratch((bm, bn))],
         interpret=interpret,
     )(xp, cp, sp, lut)
     return out[:m, :n]
-
-
-def _vmem_scratch(shape):
-    from jax.experimental.pallas import tpu as pltpu
-    return pltpu.VMEM(shape, jnp.float32)

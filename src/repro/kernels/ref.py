@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from repro.core.pofx import pofx_normalized
 
-__all__ = ["pofx_decode_ref", "pofx_matmul_ref", "fxp_matmul_ref", "decode_norm_to_fxp"]
+__all__ = ["pofx_decode_ref", "pofx_matmul_ref", "fxp_matmul_ref",
+           "decode_norm_to_fxp", "kv_flash_decode_ref"]
 
 
 def decode_norm_to_fxp(codes, N: int, ES: int, M: int):
@@ -39,6 +40,31 @@ def pofx_matmul_ref(x, codes, scale, N: int, ES: int, M: int = 8) -> jax.Array:
     w = fxp.astype(jnp.float32) * (1.0 / (1 << (M - 1)))
     y = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
     return y * jnp.reshape(scale, (1, -1)).astype(jnp.float32)
+
+
+def kv_flash_decode_ref(q, k_codes, k_scale, v_codes, v_scale, pos,
+                        spec) -> jax.Array:
+    """Oracle for the fused KV flash-decode kernel: the XLA fallback path.
+
+    Dequantize the whole cache (codes -> FxP -> value * scale), then plain
+    masked softmax attention — mathematically identical to the kernel's
+    online softmax, computed out-of-place in f32.
+
+    q: (B, G, R, Dh); codes: (B, G, S, Dh); scales: (B, G, 1, Dh);
+    pos: scalar or (B,) valid lengths.
+    """
+    from repro.core.quantizers import kv_dequantize
+
+    S = k_codes.shape[2]
+    k = kv_dequantize(k_codes, spec, k_scale, jnp.float32)
+    v = kv_dequantize(v_codes, spec, v_scale, jnp.float32)
+    s = jnp.einsum("bgrd,bgsd->bgrs", q.astype(jnp.float32), k,
+                   preferred_element_type=jnp.float32) * q.shape[-1] ** -0.5
+    valid = jnp.arange(S)[None, :] < jnp.reshape(pos, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrs,bgsd->bgrd", p, v,
+                      preferred_element_type=jnp.float32)
 
 
 def fxp_matmul_ref(a, b) -> jax.Array:

@@ -129,10 +129,19 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str = "single",
     if quant == "auto":
         quant = "bf16" if shape.kind == "train" else "pofx8"
         rec["quant"] = quant
+    # a kv= rule in the policy string sizes/lowers the quantized decode
+    # cache (code+scale leaves) through the XLA fallback path — the kernel
+    # is validated separately and kept out of the huge dry-run graphs
+    kv_spec = None
+    if shape.kind != "train" and quant not in ("bf16", "fp32") \
+            and cfg.family != "encdec":
+        kv_spec = QuantPolicy.from_string(quant).kv_spec
+        rec["kv_quant"] = bool(kv_spec)
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = mesh.size
-    model = build_model(cfg, rcfg, mesh=mesh)
+    model = build_model(cfg, rcfg, mesh=mesh, kv_spec=kv_spec,
+                        kv_kernel=False)
     repl = NamedSharding(mesh, P())
 
     t0 = time.time()

@@ -28,7 +28,14 @@ old one-shot fixed-batch driver. Design (DESIGN.md §7):
 
 ``use_kernel`` is decided by the ``LM`` the engine wraps
 (``build_model(..., use_kernel=True)``), so quantized serving exercises
-the fused Pallas PoFx/FxP kernels end to end.
+the fused Pallas PoFx/FxP kernels end to end. So is the KV-cache format
+(``build_model(..., kv_spec=...)``, DESIGN.md §8): with a quantized cache
+the slot cache's "k"/"v" leaves hold byte-wide codes next to static
+per-channel scale leaves, and the scatter/evict/resume machinery below is
+layout-agnostic — admission scatters code+scale leaves along the batch
+axis ``LM.cache_logical`` names, and eviction's re-prefill regenerates the
+identical codes (static scales + fake-quant prefill), so the
+resume-identical guarantee survives the lossy cache.
 """
 from __future__ import annotations
 
@@ -139,6 +146,16 @@ class ServeEngine:
         self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
         self._cache_log_flat = jax.tree_util.tree_flatten(
             model.cache_logical(), is_leaf=lambda x: isinstance(x, tuple))[0]
+        n_leaves = len(jax.tree_util.tree_leaves(self.cache))
+        if n_leaves != len(self._cache_log_flat):
+            # scatter zips cache leaves against logical axes positionally;
+            # a silent mismatch (e.g. a cache layout that grew leaves —
+            # quantized caches add scale leaves — without a cache_logical
+            # update) would mis-scatter instead of erroring
+            raise ValueError(
+                f"cache has {n_leaves} leaves but cache_logical names "
+                f"{len(self._cache_log_flat)}; LM.init_cache and "
+                "LM.cache_logical disagree")
         self._tok = jnp.full((n_slots, 1), self.pad_id, jnp.int32)
         self._base_key = jax.random.PRNGKey(seed)
         # placeholder slot keys (replaced at admit; fold stream disjoint
@@ -254,6 +271,7 @@ class ServeEngine:
         padded[0, :P] = ctx
         t0 = time.perf_counter()
         small = self.model.init_cache(1, self.max_len)
+        small = self._seed_kv_scales(small, slot)
         # bucket 1 means exact-length prompts: take the length=None path so
         # SSM/hybrid (which refuse right-padded prefill) serve too.
         length = None if Pb == P else jnp.asarray(P, jnp.int32)
@@ -294,6 +312,26 @@ class ServeEngine:
         self._done_box.append(st)
 
     # -- device chunk --------------------------------------------------------
+
+    def _seed_kv_scales(self, small, slot: int):
+        """Copy the target slot's static KV scale leaves into the batch-1
+        prefill cache. Scales are calibration state (per-model constants,
+        DESIGN.md §8), not per-request state: init_cache resets them to
+        1.0, so without this an operator's calibrated scales would drive
+        neither the admit prefill nor — after the scatter writes the
+        batch-1 leaves back — any later decode on that slot."""
+        if self.model.kv_spec is None:
+            return small
+        flat, treedef = jax.tree_util.tree_flatten_with_path(small)
+        big_flat = jax.tree_util.tree_flatten(self.cache)[0]
+        out = []
+        for (path, s), b, ax in zip(flat, big_flat, self._cache_log_flat):
+            name = getattr(path[-1], "key", None)
+            if isinstance(name, str) and name.endswith("_scale"):
+                axis = ax.index("batch")
+                s = jax.lax.dynamic_slice_in_dim(b, slot, 1, axis=axis)
+            out.append(s)
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     def _scatter_impl(self, big, small, slot):
         """Write a batch-1 prefilled cache into slot ``slot`` of the big

@@ -8,6 +8,13 @@ admission, scan-fused multi-token decode with per-slot stopping, pluggable
 sampling. ``--use-kernel`` routes every quantized matmul through the fused
 Pallas PoFx/FxP kernels (the paper's Move&Store accelerator datapath;
 interpret mode on CPU), so quantized serving actually exercises them.
+``--kv-quant fxp8`` (or a ``kv=fxp8`` rule inside ``--quant``) additionally
+stores the decode KV cache as quantization codes and — with
+``--use-kernel`` — attends through the fused Pallas flash-decode kernel,
+cutting the S-proportional decode HBM term 2x+ (DESIGN.md §8):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \\
+        --quant pofx8 --kv-quant fxp8 --use-kernel
 
 Token accounting: ``--gen`` is the number of tokens *generated per request*
 (the first comes from the prefill logits, the remaining ``gen-1`` from
@@ -32,9 +39,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
-from repro.core.policy import QuantPolicy, add_policy_arg, storage_report
+from repro.core.policy import (QuantPolicy, add_kv_quant_arg, add_policy_arg,
+                               format_spec, resolve_kv_spec, storage_report)
 from repro.launch.engine import Request, SamplingParams, ServeEngine
-from repro.nn.models import apply_policy, build_model
+from repro.nn.models import (apply_policy, build_model,
+                             kv_decode_bytes_per_token)
 
 # Back-compat name; the policy-aware report lives in repro.core.policy.
 param_storage_report = storage_report
@@ -99,7 +108,10 @@ def main(argv=None) -> None:
     add_policy_arg(ap, default="pofx8")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route quantized matmuls through the fused Pallas "
-                         "PoFx/FxP kernels (interpret mode on CPU)")
+                         "PoFx/FxP kernels, and quantized-KV decode through "
+                         "the fused flash-decode kernel (interpret mode on "
+                         "CPU)")
+    add_kv_quant_arg(ap)
     ap.add_argument("--batch", type=int, default=4,
                     help="engine slots (legacy: fixed batch size)")
     ap.add_argument("--requests", type=int, default=0,
@@ -130,13 +142,30 @@ def main(argv=None) -> None:
     if args.smoke:
         cfg = smoke_cfg(cfg)
     rcfg = RunConfig(remat="none")
-    model = build_model(cfg, rcfg, use_kernel=args.use_kernel)
-    params = model.init(jax.random.PRNGKey(0))
     policy = QuantPolicy.from_string(args.quant)
+    kv_spec = resolve_kv_spec(args.kv_quant, policy)
+    if kv_spec is not None and cfg.family == "encdec":
+        print("(encdec: quantized KV cache unsupported on the legacy "
+              "one-shot path; serving with a bf16 cache)")
+        kv_spec = None
+    model = build_model(cfg, rcfg, use_kernel=args.use_kernel,
+                        kv_spec=kv_spec)
+    params = model.init(jax.random.PRNGKey(0))
     params = apply_policy(params, policy)
     print(f"[{args.arch} quant={policy.to_string()} "
+          f"kv={format_spec(kv_spec) if kv_spec else 'bf16'} "
           f"kernel={'pallas' if args.use_kernel else 'xla-lut'}]")
     print(storage_report(params, policy))
+    ctx_len = args.prompt_len + args.gen
+    kv_q = kv_decode_bytes_per_token(cfg, ctx_len, kv_spec)
+    kv_b = kv_decode_bytes_per_token(cfg, ctx_len, None)
+    if kv_spec is not None and kv_q["code_bytes"]:
+        print(f"  kv cache @ {ctx_len} ctx: "
+              f"{kv_q['code_bytes'] / 2**10:.1f} KiB/token streamed "
+              f"(+{kv_q['scale_bytes'] / 2**10:.1f} KiB static scales) vs "
+              f"bf16 {kv_b['code_bytes'] / 2**10:.1f} KiB "
+              f"({kv_b['code_bytes'] / kv_q['code_bytes']:.1f}x less decode "
+              f"HBM traffic)")
 
     if args.legacy or cfg.family == "encdec":
         if not args.legacy:

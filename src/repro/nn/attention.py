@@ -22,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantizers import kv_dequantize, kv_quantize
 from .layers import (Param, apply_rotary, dense_init, matmul_param,
                      param_value, rmsnorm, rotary_cos_sin)
 
@@ -301,11 +302,25 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
                  positions: jax.Array, causal: bool = True,
                  cache: Optional[dict] = None, cache_pos=None,
                  xa: Optional[jax.Array] = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 kv_spec=None, kv_kernel: bool = False,
+                 kv_scales: Optional[dict] = None):
     """Full attention layer. Returns (y, new_cache_kv or None).
 
-    cache: {"k": (B,S,G,Dh), "v": ...} for decode (self) or precomputed
+    cache: {"k": (B,G,S,Dh), "v": ...} for decode (self) or precomputed
     cross k/v (xa is ignored then). xa: encoder states for cross-attention.
+
+    Quantized KV cache (DESIGN.md §8): when ``kv_spec`` is a byte-wide
+    fxp/pofx QuantSpec, cache "k"/"v" leaves hold quantization *codes* and
+    ride next to static per-head-dim-channel "k_scale"/"v_scale" leaves.
+    Decode quantizes the new token's K/V on write and attends through
+    ``kernels.kv_flash_decode`` (``kv_kernel=True``: codes stream from HBM
+    and dequantize in VMEM) or the XLA fallback (dequantize-on-read +
+    ``decode_attention``). Prefill passes ``kv_scales`` instead of a cache:
+    K/V are fake-quantized through the cache grid *before* flash attention
+    so prefill sees exactly the values decode will read back — that
+    equivalence is what makes the engine's evict -> re-prefill resume
+    bit-identical under a lossy cache.
     """
     B, Sq, _ = x.shape
     H, G, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -350,9 +365,19 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
             # cache_pos is a scalar (uniform batch) or a (B,) array of
             # per-slot write positions (continuous batching) — the array
             # case vmaps the update so each slot writes at its own length.
-            kdt = cache["k"].dtype
-            k_upd = jnp.swapaxes(k, 1, 2).astype(kdt)
-            v_upd = jnp.swapaxes(v, 1, 2).astype(kdt)
+            # Quantized caches write CODES: the new token's K/V quantizes
+            # against the static channel scale, so full-precision K/V never
+            # reaches HBM.
+            quant = kv_spec is not None and "k_scale" in cache
+            k_upd = jnp.swapaxes(k, 1, 2)
+            v_upd = jnp.swapaxes(v, 1, 2)
+            if quant:
+                k_upd = kv_quantize(k_upd, kv_spec, cache["k_scale"])
+                v_upd = kv_quantize(v_upd, kv_spec, cache["v_scale"])
+            else:
+                kdt = cache["k"].dtype
+                k_upd = k_upd.astype(kdt)
+                v_upd = v_upd.astype(kdt)
             zero = jnp.zeros((), jnp.int32)
             if getattr(cache_pos, "ndim", 0):
                 def put(c, u, p):
@@ -366,9 +391,27 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
                     cache["v"], v_upd, (zero, zero, cache_pos, zero))
             k_cache = ctx.constrain(k_cache, "batch", None, "kv_seq", "head_dim")
             v_cache = ctx.constrain(v_cache, "batch", None, "kv_seq", "head_dim")
-            y = decode_attention(q, k_cache, v_cache, cache_pos + 1, ctx, mode,
-                                 bf16_compute=rcfg.serve_bf16_compute)
-            new_kv = {"k": k_cache, "v": v_cache}
+            if quant:
+                new_kv = {"k": k_cache, "k_scale": cache["k_scale"],
+                          "v": v_cache, "v_scale": cache["v_scale"]}
+                if kv_kernel:
+                    from repro.kernels import kv_flash_decode
+                    o = kv_flash_decode(q[:, 0], k_cache, cache["k_scale"],
+                                        v_cache, cache["v_scale"],
+                                        cache_pos + 1, kv_spec)
+                    y = ctx.constrain(o[:, None].astype(q.dtype),
+                                      *_q_logical(mode))
+                else:
+                    # XLA fallback: dequantize-on-read + plain decode
+                    # attention (CPU smoke / dry-run lowering path).
+                    kf = kv_dequantize(k_cache, kv_spec, cache["k_scale"])
+                    vf = kv_dequantize(v_cache, kv_spec, cache["v_scale"])
+                    y = decode_attention(q, kf, vf, cache_pos + 1, ctx, mode)
+            else:
+                y = decode_attention(q, k_cache, v_cache, cache_pos + 1, ctx,
+                                     mode,
+                                     bf16_compute=rcfg.serve_bf16_compute)
+                new_kv = {"k": k_cache, "v": v_cache}
     else:
         # train / prefill
         cos, sin = rotary_cos_sin(positions, Dh, cfg.rope_theta)
@@ -378,7 +421,22 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
         if cfg.qk_norm:
             k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
         k = apply_rotary(k, cos, sin)
-        new_kv = {"k": k, "v": v}           # cache keeps the grouped heads
+        if kv_spec is not None and kv_scales is not None:
+            # Quantized-cache prefill: round K/V through the cache grid
+            # BEFORE attending, and hand the codes back for the cache
+            # write. Prefill thereby attends to exactly what decode will
+            # dequantize later — the invariant behind bit-identical
+            # evict -> re-prefill resume (scales are static, so the same
+            # floats always re-quantize to the same codes).
+            ks = jnp.swapaxes(kv_scales["k_scale"], 1, 2)  # (B,1,G,Dh)
+            vs = jnp.swapaxes(kv_scales["v_scale"], 1, 2)
+            kc = kv_quantize(k, kv_spec, ks)
+            vc = kv_quantize(v, kv_spec, vs)
+            k = kv_dequantize(kc, kv_spec, ks, k.dtype)
+            v = kv_dequantize(vc, kv_spec, vs, v.dtype)
+            new_kv = {"k": kc, "v": vc}     # codes, grouped heads
+        else:
+            new_kv = {"k": k, "v": v}       # cache keeps the grouped heads
         q, k, v = _maybe_expand(q, k, v, mode, H, R)
         q = ctx.constrain(q, *_q_logical(mode))
         k = ctx.constrain(k, *_kv_logical(mode))

@@ -31,14 +31,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.policy import QuantPolicy
-from repro.core.quantizers import QuantSpec, QuantizedTensor, quantize
+from repro.core.quantizers import (QuantSpec, QuantizedTensor, kv_code_dtype,
+                                   quantize, validate_kv_spec)
 from .layers import dense_init, matmul_param, param_value, rmsnorm
 from .sharding import ShardingCtx, make_ctx
 from . import transformer as T
 from . import ssm as S
 
 __all__ = ["LM", "build_model", "apply_policy", "quantize_params",
-           "input_specs", "ce_loss"]
+           "input_specs", "ce_loss", "kv_decode_bytes_per_token"]
 
 
 def _dt(name: str):
@@ -77,6 +78,20 @@ class LM:
     rcfg: RunConfig
     ctx: ShardingCtx
     use_kernel: bool = False
+    # Decode KV-cache format (DESIGN.md §8): a byte-wide fxp/pofx QuantSpec
+    # makes init_cache allocate code+scale leaves and routes decode through
+    # the quantized datapath; None keeps the bf16/f32 cache. kv_kernel
+    # selects the fused Pallas flash-decode kernel (None: follow
+    # use_kernel) vs the XLA quantize-on-write/dequantize-on-read fallback.
+    kv_spec: Optional[QuantSpec] = None
+    kv_kernel: Optional[bool] = None
+
+    def __post_init__(self):
+        self.kv_spec = validate_kv_spec(self.kv_spec)
+
+    @property
+    def kv_use_kernel(self) -> bool:
+        return self.use_kernel if self.kv_kernel is None else self.kv_kernel
 
     # -- construction helpers ------------------------------------------------
 
@@ -285,37 +300,61 @@ class LM:
 
     # -- decode ----------------------------------------------------------------
 
-    def _kv_cache(self, batch: int, max_len: int):
+    def _kv_cache(self, batch: int, max_len: int,
+                  kv_spec: Optional[QuantSpec] = None):
         # heads-major (B, G, S, Dh): decode einsums contract on the minor
         # axis with (b, g) batch dims — no per-step cache transpose.
+        # Quantized caches (DESIGN.md §8) hold byte-wide codes next to a
+        # STATIC per-head-dim-channel scale leaf (B, G, 1, Dh); static so
+        # quantize-on-write is deterministic and evict -> re-prefill resume
+        # stays bit-identical.
         cfg = self.cfg
-        kdt = _dt(self.rcfg.kv_cache_dtype) if self.rcfg.kv_cache_dtype != "int8" else jnp.bfloat16
         G, Dh = cfg.n_kv_heads, cfg.d_head
+        if kv_spec is not None:
+            cdt = kv_code_dtype(kv_spec)
+            return {"k": jnp.zeros((batch, G, max_len, Dh), cdt),
+                    "k_scale": jnp.ones((batch, G, 1, Dh), jnp.float32),
+                    "v": jnp.zeros((batch, G, max_len, Dh), cdt),
+                    "v_scale": jnp.ones((batch, G, 1, Dh), jnp.float32)}
+        kdt = _dt(self.rcfg.kv_cache_dtype) if self.rcfg.kv_cache_dtype != "int8" else jnp.bfloat16
         return {"k": jnp.zeros((batch, G, max_len, Dh), kdt),
                 "v": jnp.zeros((batch, G, max_len, Dh), kdt)}
 
     def init_cache(self, batch: int, max_len: int,
-                   enc_len: Optional[int] = None) -> Dict[str, Any]:
+                   enc_len: Optional[int] = None,
+                   kv_spec="auto") -> Dict[str, Any]:
         """Zero decode cache (stacked over layers/groups).
 
-        enc_len sizes the encdec cross-attention cache (defaults to max_len).
+        enc_len sizes the encdec cross-attention cache (defaults to
+        max_len). kv_spec overrides the model's KV-cache format ("auto":
+        use ``self.kv_spec``); a quantized spec allocates code+scale
+        leaves instead of float K/V (DESIGN.md §8). The override is
+        allocation-only (sizing / eval_shape): prefill and decode_step
+        reject a cache whose layout disagrees with the model's own
+        kv_spec rather than silently casting floats into code leaves.
         """
         cfg = self.cfg
         fam = cfg.family
+        spec = self.kv_spec if kv_spec == "auto" else validate_kv_spec(kv_spec)
+        if spec is not None and fam == "encdec":
+            raise ValueError(
+                "quantized KV cache is not supported for encdec: the "
+                "legacy one-shot path owns its cross-attention cache "
+                "(DESIGN.md §8)")
         def stack(make, n):
             return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n)])
+        mk = lambda: self._kv_cache(batch, max_len, spec)
         cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
         if fam == "dense":
-            cache["kv"] = stack(lambda: self._kv_cache(batch, max_len), cfg.n_layers)
+            cache["kv"] = stack(mk, cfg.n_layers)
         elif fam == "moe":
             ng = self.n_groups
-            cache["kv"] = {"moe": stack(lambda: self._kv_cache(batch, max_len), ng)}
+            cache["kv"] = {"moe": stack(mk, ng)}
             if cfg.moe_every > 1:
                 cache["kv"]["dense"] = stack(
-                    lambda: stack(lambda: self._kv_cache(batch, max_len),
-                                  cfg.moe_every - 1), ng)
+                    lambda: stack(mk, cfg.moe_every - 1), ng)
         elif fam == "encdec":
-            cache["kv"] = stack(lambda: self._kv_cache(batch, max_len), cfg.n_layers)
+            cache["kv"] = stack(mk, cfg.n_layers)
             cache["cross"] = stack(lambda: self._kv_cache(batch, enc_len or max_len),
                                    cfg.n_layers)
             cache["xlen"] = jnp.zeros((), jnp.int32)
@@ -323,28 +362,41 @@ class LM:
             cache["ssm"] = stack(lambda: S.mamba1_init_cache(cfg, batch), cfg.n_layers)
         elif fam == "hybrid":
             cache["ssm"] = stack(lambda: S.mamba2_init_cache(cfg, batch), cfg.n_layers)
-            cache["shared_kv"] = stack(lambda: self._kv_cache(batch, max_len),
-                                       len(self._hybrid_chunks()))
+            cache["shared_kv"] = stack(mk, len(self._hybrid_chunks()))
         return cache
 
     def cache_logical(self) -> Dict[str, Any]:
-        """Logical axes for every cache leaf (seq-sharded KV for decode)."""
+        """Logical axes for every cache leaf (seq-sharded KV for decode).
+
+        Quantized caches add per-head-dim-channel scale leaves; codes keep
+        the float leaves' kv_seq sharding (the flash-decode combine over a
+        sequence-sharded cache works on codes exactly as on floats).
+        """
         cfg = self.cfg
         fam = cfg.family
         kv = {"k": ("layers", "batch", None, "kv_seq", "head_dim"),
               "v": ("layers", "batch", None, "kv_seq", "head_dim")}
+        if self.kv_spec is not None:
+            kv["k_scale"] = ("layers", "batch", None, None, "head_dim")
+            kv["v_scale"] = ("layers", "batch", None, None, "head_dim")
         out: Dict[str, Any] = {"pos": ()}
         if fam == "dense":
             out["kv"] = kv
         elif fam == "moe":
             out["kv"] = {"moe": kv}
             if cfg.moe_every > 1:
-                out["kv"]["dense"] = {
+                dense_kv = {
                     "k": ("layers", "layers2", "batch", None, "kv_seq", "head_dim"),
                     "v": ("layers", "layers2", "batch", None, "kv_seq", "head_dim")}
+                if self.kv_spec is not None:
+                    dense_kv["k_scale"] = ("layers", "layers2", "batch",
+                                           None, None, "head_dim")
+                    dense_kv["v_scale"] = ("layers", "layers2", "batch",
+                                           None, None, "head_dim")
+                out["kv"]["dense"] = dense_kv
         elif fam == "encdec":
-            out["kv"] = kv
-            out["cross"] = kv
+            out["kv"] = {"k": kv["k"], "v": kv["v"]}
+            out["cross"] = {"k": kv["k"], "v": kv["v"]}
             out["xlen"] = ()
         elif fam == "ssm":
             out["ssm"] = {"conv": ("layers", "batch", "conv", "d_inner"),
@@ -354,6 +406,32 @@ class LM:
                           "ssm": ("layers", "batch", "heads_r", None, "state")}
             out["shared_kv"] = kv
         return out
+
+    def _check_cache_layout(self, cache) -> None:
+        # A cache allocated under a different kv_spec than the model's
+        # (init_cache(kv_spec=...) is an allocation override only) would
+        # silently astype float K/V into int8 code leaves — or attend to
+        # raw codes as if they were floats. Runs at trace time.
+        kv = cache.get("kv") if "kv" in cache else cache.get("shared_kv")
+        if not isinstance(kv, dict):
+            return
+        if "k" not in kv:                     # moe nests {"moe": ..., ...}
+            kv = kv.get("moe", {})
+            if "k" not in kv:
+                return
+        quant = "k_scale" in kv
+        if (self.kv_spec is not None) != quant:
+            raise ValueError(
+                f"cache layout disagrees with the model's kv_spec="
+                f"{self.kv_spec!r}: the cache "
+                f"{'has' if quant else 'lacks'} scale leaves (was it "
+                "allocated by init_cache(kv_spec=...) with a different "
+                "format?)")
+        if quant and kv["k"].dtype != kv_code_dtype(self.kv_spec):
+            raise ValueError(
+                f"cache code dtype {kv['k'].dtype} does not match the "
+                f"model's kv_spec={self.kv_spec!r} "
+                f"(expects {jnp.dtype(kv_code_dtype(self.kv_spec)).name})")
 
     def cache_shardings(self, batch: int, max_len: int):
         abstract = jax.eval_shape(lambda: self.init_cache(batch, max_len))
@@ -380,28 +458,42 @@ class LM:
         an SSM recurrent state, which has no per-position mask.
         """
         cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        self._check_cache_layout(cache)
         B, Sq = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
         x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
         fam = cfg.family
         max_len = _cache_len(cache)
+        kv_spec = self.kv_spec
+
+        def scales_of(layer_cache):
+            # quantized cache: hand the layer's static scales to the block
+            # so prefill fake-quantizes K/V through the cache grid before
+            # attending (bit-identical evict -> re-prefill resume).
+            if kv_spec is None or "k_scale" not in layer_cache:
+                return None
+            return {"k_scale": layer_cache["k_scale"],
+                    "v_scale": layer_cache["v_scale"]}
 
         def write_kv(layer_cache, new_kv):
-            # grouped (B, S, G, Dh) -> heads-major cache (B, G, S, Dh)
-            kdt = layer_cache["k"].dtype
-            k = jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["k"], jnp.swapaxes(new_kv["k"], 1, 2).astype(kdt),
-                0, axis=2)
-            v = jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["v"], jnp.swapaxes(new_kv["v"], 1, 2).astype(kdt),
-                0, axis=2)
-            return {"k": k, "v": v}
+            # grouped (B, S, G, Dh) -> heads-major cache (B, G, S, Dh);
+            # quantized caches receive codes (same layout, code dtype) and
+            # keep their scale leaves untouched.
+            out = dict(layer_cache)
+            for name in ("k", "v"):
+                dst = layer_cache[name]
+                upd = jnp.swapaxes(new_kv[name], 1, 2).astype(dst.dtype)
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    dst, upd, 0, axis=2)
+            return out
 
         if fam == "dense":
             def body(h, lp, lc):
                 y, kv = T.dense_block_forward(lp, h, cfg, ctx, rcfg,
                                               positions=positions,
-                                              use_kernel=self.use_kernel)
+                                              use_kernel=self.use_kernel,
+                                              kv_spec=kv_spec,
+                                              kv_scales=scales_of(lc))
                 return y, write_kv(lc, kv)
             x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
                                       cache=cache["kv"], length=cfg.n_layers)
@@ -410,19 +502,23 @@ class LM:
             def body(h, lp, lc):
                 new_c = dict(lc)
                 if "dense" in params["blocks"]:
-                    dk = {"k": [], "v": []}
+                    writes = []
                     for i in range(cfg.moe_every - 1):
                         dlp = jax.tree.map(lambda a: a[i], lp["dense"])
                         dlc = jax.tree.map(lambda a: a[i], lc["dense"])
                         h, kv = T.dense_block_forward(dlp, h, cfg, ctx, rcfg,
                                                       positions=positions,
-                                                      use_kernel=self.use_kernel)
-                        w = write_kv(dlc, kv)
-                        dk["k"].append(w["k"]); dk["v"].append(w["v"])
-                    new_c["dense"] = {"k": jnp.stack(dk["k"]), "v": jnp.stack(dk["v"])}
+                                                      use_kernel=self.use_kernel,
+                                                      kv_spec=kv_spec,
+                                                      kv_scales=scales_of(dlc))
+                        writes.append(write_kv(dlc, kv))
+                    new_c["dense"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *writes)
                 h, kv = T.moe_block_forward(lp["moe"], h, cfg, ctx, rcfg,
                                             positions=positions,
-                                            use_kernel=self.use_kernel)
+                                            use_kernel=self.use_kernel,
+                                            kv_spec=kv_spec,
+                                            kv_scales=scales_of(lc["moe"]))
                 new_c["moe"] = write_kv(lc["moe"], kv)
                 return h, new_c
             blocks_cache = {"moe": cache["kv"]["moe"]}
@@ -489,9 +585,15 @@ class LM:
         ssm_new = []
         for ci, size in enumerate(chunks):
             lc = jax.tree.map(lambda a: a[ci], cache["shared_kv"])
+            kv_scales = None
+            if self.kv_spec is not None and "k_scale" in lc:
+                kv_scales = {"k_scale": lc["k_scale"],
+                             "v_scale": lc["v_scale"]}
             x, kv = T.dense_block_forward(params["shared"], x, cfg, ctx, rcfg,
                                           positions=positions,
-                                          use_kernel=self.use_kernel)
+                                          use_kernel=self.use_kernel,
+                                          kv_spec=self.kv_spec,
+                                          kv_scales=kv_scales)
             shared_new.append(write_kv(lc, kv))
             sub = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
             subc = jax.tree.map(lambda a: a[off:off + size], cache["ssm"])
@@ -516,18 +618,21 @@ class LM:
         write position and the attention valid-mask all follow it per slot.
         """
         cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        self._check_cache_layout(cache)
         B = tokens.shape[0]
         pos = cache["pos"]
         positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (B, 1))
         x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
         fam = cfg.family
+        kv_kw = dict(kv_spec=self.kv_spec, kv_kernel=self.kv_use_kernel)
         new_cache = dict(cache, pos=pos + 1)
         if fam == "dense":
             def body(h, lp, lc):
                 y, kv = T.dense_block_forward(lp, h, cfg, ctx, rcfg,
                                               positions=positions, cache=lc,
                                               cache_pos=pos,
-                                              use_kernel=self.use_kernel)
+                                              use_kernel=self.use_kernel,
+                                              **kv_kw)
                 return y, kv
             x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
                                       cache=cache["kv"], length=cfg.n_layers)
@@ -536,20 +641,23 @@ class LM:
             def body(h, lp, lc):
                 new_c = dict(lc)
                 if "dense" in params["blocks"]:
-                    ks, vs = [], []
+                    kvs = []
                     for i in range(cfg.moe_every - 1):
                         dlp = jax.tree.map(lambda a: a[i], lp["dense"])
                         dlc = jax.tree.map(lambda a: a[i], lc["dense"])
                         h, kv = T.dense_block_forward(dlp, h, cfg, ctx, rcfg,
                                                       positions=positions,
                                                       cache=dlc, cache_pos=pos,
-                                                      use_kernel=self.use_kernel)
-                        ks.append(kv["k"]); vs.append(kv["v"])
-                    new_c["dense"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+                                                      use_kernel=self.use_kernel,
+                                                      **kv_kw)
+                        kvs.append(kv)
+                    new_c["dense"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *kvs)
                 h, kv = T.moe_block_forward(lp["moe"], h, cfg, ctx, rcfg,
                                             positions=positions, cache=lc["moe"],
                                             cache_pos=pos,
-                                            use_kernel=self.use_kernel)
+                                            use_kernel=self.use_kernel,
+                                            **kv_kw)
                 new_c["moe"] = kv
                 return h, new_c
             blocks_cache = {"moe": cache["kv"]["moe"]}
@@ -591,7 +699,8 @@ class LM:
                 x, kv = T.dense_block_forward(params["shared"], x, cfg, ctx, rcfg,
                                               positions=positions, cache=lc,
                                               cache_pos=pos,
-                                              use_kernel=self.use_kernel)
+                                              use_kernel=self.use_kernel,
+                                              **kv_kw)
                 shared_new.append(kv)
                 sub = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
                 subc = jax.tree.map(lambda a: a[off:off + size], cache["ssm"])
@@ -622,10 +731,43 @@ def _cache_len(cache) -> int:
     return 0
 
 
+def kv_decode_bytes_per_token(cfg: ModelConfig, context_len: int,
+                              kv_spec: Optional[QuantSpec] = None,
+                              cache_dtype_bytes: int = 2) -> Dict[str, float]:
+    """Modeled HBM bytes read from the KV cache per decoded token.
+
+    Every decode step re-reads each attention layer's full valid K+V prefix
+    — the S-proportional term that bounds decode throughput at long context
+    (benchmarks/bench_roofline.py). Quantized caches stream byte-wide codes
+    (``code_bytes``) plus an S-independent per-step scale read
+    (``scale_bytes``: (B-slot share) 2 * G * Dh * 4 per layer, VMEM-resident
+    in the fused kernel and negligible at depth); bf16 caches stream
+    ``cache_dtype_bytes`` per element and no scales. pofx codes occupy one
+    byte per element in HBM even though only N-1 bits carry information —
+    bit-packing them is headroom this model does not claim (DESIGN.md §8).
+    """
+    fam = cfg.family
+    if fam == "ssm":
+        n_attn = 0
+    elif fam == "hybrid":
+        n_attn = -(-cfg.n_layers // cfg.attn_every) if cfg.attn_every else 0
+    else:  # dense / moe / encdec self-attention layers
+        n_attn = cfg.n_layers
+    G, Dh = cfg.n_kv_heads, cfg.d_head
+    per_elem = 1 if kv_spec is not None else cache_dtype_bytes
+    return {
+        "code_bytes": float(n_attn * 2 * G * context_len * Dh * per_elem),
+        "scale_bytes": float(n_attn * 2 * G * Dh * 4) if kv_spec is not None
+        else 0.0,
+    }
+
+
 def build_model(cfg: ModelConfig, rcfg: RunConfig, mesh=None,
-                use_kernel: bool = False) -> LM:
+                use_kernel: bool = False, kv_spec=None,
+                kv_kernel: Optional[bool] = None) -> LM:
     ctx = make_ctx(mesh, sequence_parallel=rcfg.sequence_parallel)
-    return LM(cfg, rcfg, ctx, use_kernel=use_kernel)
+    return LM(cfg, rcfg, ctx, use_kernel=use_kernel, kv_spec=kv_spec,
+              kv_kernel=kv_kernel)
 
 
 # ---------------------------------------------------------------------------

@@ -53,11 +53,13 @@ def dense_block_logical(cfg) -> dict:
 
 
 def dense_block_forward(p, x, cfg, ctx, rcfg, *, positions, cache=None,
-                        cache_pos=None, causal=True, xa=None, use_kernel=False):
+                        cache_pos=None, causal=True, xa=None, use_kernel=False,
+                        kv_spec=None, kv_kernel=False, kv_scales=None):
     h, new_kv = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
                              ctx, rcfg, positions=positions, causal=causal,
                              cache=cache, cache_pos=cache_pos, xa=xa,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, kv_spec=kv_spec,
+                             kv_kernel=kv_kernel, kv_scales=kv_scales)
     x = x + h
     x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.act,
                         ctx, use_kernel=use_kernel)
@@ -80,11 +82,13 @@ def moe_block_logical(cfg) -> dict:
 
 
 def moe_block_forward(p, x, cfg, ctx, rcfg, *, positions, cache=None,
-                      cache_pos=None, use_kernel=False):
+                      cache_pos=None, use_kernel=False,
+                      kv_spec=None, kv_kernel=False, kv_scales=None):
     h, new_kv = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
                              ctx, rcfg, positions=positions, causal=True,
                              cache=cache, cache_pos=cache_pos,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, kv_spec=kv_spec,
+                             kv_kernel=kv_kernel, kv_scales=kv_scales)
     x = x + h
     x = x + moe_forward(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, ctx,
                         use_kernel=use_kernel)

@@ -6,8 +6,12 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import QuantSpec, quantize
-from repro.kernels import fxp_matmul, pofx_decode, pofx_matmul, quant_matmul
-from repro.kernels.ref import fxp_matmul_ref, pofx_decode_ref, pofx_matmul_ref
+from repro.core.quantizers import kv_quantize
+from repro.kernels import (default_blocks, fxp_matmul, kv_flash_decode,
+                           pofx_decode, pofx_matmul, quant_matmul)
+from repro.kernels.ref import (decode_norm_to_fxp, fxp_matmul_ref,
+                               kv_flash_decode_ref, pofx_decode_ref,
+                               pofx_matmul_ref)
 from proptest import Floats, given
 
 RNG = np.random.default_rng(1234)
@@ -15,6 +19,8 @@ RNG = np.random.default_rng(1234)
 DECODE_SHAPES = [(8, 8), (100, 100), (256, 512), (33, 257), (1, 128), (512, 64)]
 POSIT_CONFIGS = [(8, 2), (8, 0), (6, 1), (7, 3), (5, 0), (9, 2)]
 MM_SHAPES = [(16, 32, 24), (64, 200, 300), (128, 128, 128), (7, 65, 130), (1, 256, 16)]
+KV_SPECS = [QuantSpec(kind="fxp", M=8, F=7), QuantSpec(kind="fxp", M=8, F=4),
+            QuantSpec(kind="pofx", N=8, ES=2), QuantSpec(kind="pofx", N=6, ES=1)]
 
 
 @pytest.mark.parametrize("shape", DECODE_SHAPES)
@@ -58,6 +64,74 @@ def test_pofx_matmul_activation_dtypes(dtype):
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
                                rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
                                atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("N,ES", POSIT_CONFIGS)
+@pytest.mark.parametrize("M", [4, 8, 12, 16])
+def test_pad_code_zero_decodes_to_zero(N, ES, M):
+    """Regression for the matmul kernels' zero padding: ``pofx_matmul``
+    pads code tiles with 0 on the claim that code 0 decodes to value 0 (so
+    padded K-dim tiles contribute nothing to the accumulator), and
+    ``kv_flash_decode`` zero-pads ragged S tiles the same way. A LUT or
+    bit-level decode change that broke this would silently corrupt every
+    padded tile — pin it across the supported (N, ES, M) grid."""
+    zero = jnp.zeros((1, 1), jnp.int32)
+    assert int(decode_norm_to_fxp(zero, N, ES, M)[0, 0]) == 0
+
+
+def test_default_blocks_table():
+    # every backend entry is a 3-tuple; the active backend resolves
+    for backend in ("tpu", "cpu", "gpu"):
+        assert len(default_blocks(backend)) == 3
+    assert default_blocks("unknown-backend") == default_blocks("tpu")
+    assert len(default_blocks()) == 3
+
+
+@pytest.mark.parametrize("spec", KV_SPECS, ids=lambda s: f"{s.kind}{s.N if s.kind=='pofx' else s.M}")
+@pytest.mark.parametrize("block_s", [8, 16, 64])
+def test_kv_flash_decode_matches_ref(spec, block_s):
+    """Fused kernel vs the XLA dequantize-on-read oracle, ragged per-slot
+    positions included (masked tail + zero-padded tiles)."""
+    rng = np.random.default_rng(11)
+    B, G, R, Dh, S = 3, 2, 4, 32, 40
+    q = jnp.asarray(rng.standard_normal((B, G, R, Dh)), jnp.float32)
+    ks = jnp.asarray(np.exp2(rng.integers(-1, 3, (B, G, 1, Dh))), jnp.float32)
+    vs = jnp.asarray(np.exp2(rng.integers(-2, 2, (B, G, 1, Dh))), jnp.float32)
+    kc = kv_quantize(jnp.asarray(rng.standard_normal((B, G, S, Dh)),
+                                 jnp.float32), spec, ks)
+    vc = kv_quantize(jnp.asarray(rng.standard_normal((B, G, S, Dh)),
+                                 jnp.float32), spec, vs)
+    pos = jnp.asarray([1, 17, 40], jnp.int32)   # ragged, incl. full cache
+    out = kv_flash_decode(q, kc, ks, vc, vs, pos, spec, block_s=block_s)
+    ref = kv_flash_decode_ref(q, kc, ks, vc, vs, pos, spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kv_flash_decode_scalar_pos_and_shape_guards():
+    spec = QuantSpec(kind="fxp", M=8, F=7)
+    rng = np.random.default_rng(5)
+    B, G, R, Dh, S = 2, 1, 2, 16, 12
+    q = jnp.asarray(rng.standard_normal((B, G, R, Dh)), jnp.float32)
+    ones = jnp.ones((B, G, 1, Dh), jnp.float32)
+    kc = kv_quantize(jnp.asarray(rng.standard_normal((B, G, S, Dh)),
+                                 jnp.float32), spec, ones)
+    vc = kv_quantize(jnp.asarray(rng.standard_normal((B, G, S, Dh)),
+                                 jnp.float32), spec, ones)
+    out = kv_flash_decode(q, kc, ones, vc, ones, jnp.asarray(7), spec,
+                          block_s=4)
+    ref = kv_flash_decode_ref(q, kc, ones, vc, ones, jnp.asarray(7), spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="k_scale"):
+        kv_flash_decode(q, kc, jnp.ones((B, G, S, Dh)), vc, ones,
+                        jnp.asarray(7), spec)
+    with pytest.raises(ValueError, match="v_scale"):
+        kv_flash_decode(q, kc, ones, vc, jnp.ones((B, G, S, Dh)),
+                        jnp.asarray(7), spec)
+    with pytest.raises(ValueError, match="mismatch"):
+        kv_flash_decode(q, kc, ones, vc[:, :, :-1], ones, jnp.asarray(7),
+                        spec)
 
 
 @pytest.mark.parametrize("m,k,n", MM_SHAPES)

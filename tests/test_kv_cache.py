@@ -1,0 +1,364 @@
+"""Quantized KV cache subsystem tests (DESIGN.md §8).
+
+Covers the ``kv=`` policy rule class, the 4D code/scale quantize helpers,
+cache allocation (code+scale leaves, logical-axis agreement), the
+model-level kernel-vs-XLA-fallback equivalence, and — the load-bearing
+engine guarantees — evict -> re-prefill resume bit-identity under a lossy
+cache and greedy token-identity between the fused flash-decode kernel and
+the quantize-on-write/dequantize-on-read fallback.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.policy import (PRESETS, QuantPolicy, format_spec,
+                               parse_kv_spec, resolve_kv_spec)
+from repro.core.quantizers import (QuantSpec, kv_code_dtype, kv_dequantize,
+                                   kv_quantize, validate_kv_spec)
+from repro.launch.engine import Request, SamplingParams, ServeEngine
+from repro.nn.models import build_model, kv_decode_bytes_per_token
+
+FXP8 = QuantSpec(kind="fxp", M=8, F=7)
+POFX8 = QuantSpec(kind="pofx", N=8, ES=2)
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    cfg = smoke(ARCHS["yi-9b"])
+    rcfg = RunConfig(remat="none")
+    params = build_model(cfg, rcfg).init(jax.random.PRNGKey(0))
+    return cfg, rcfg, params
+
+
+def _model(cfg, rcfg, kv_spec=None, kv_kernel=None, use_kernel=False):
+    return build_model(cfg, rcfg, use_kernel=use_kernel, kv_spec=kv_spec,
+                       kv_kernel=kv_kernel)
+
+
+def _prompt(i, n=8, vocab=512):
+    return np.random.RandomState(i).randint(0, vocab, n)
+
+
+def _req(i, vocab, max_new=5, temp=0.0, top_k=0, arrival=0.0, n=8):
+    return Request(rid=i, prompt=_prompt(i, n, vocab), max_new=max_new,
+                   sampling=SamplingParams(temperature=temp, top_k=top_k),
+                   arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
+# Policy grammar: the kv= rule class
+# ---------------------------------------------------------------------------
+
+
+def test_kv_rule_parse_and_roundtrip():
+    pol = QuantPolicy.from_string("attn/*=pofx8es2,kv=fxp8,*=bf16")
+    assert pol.kv_spec == FXP8
+    assert "kv=fxp8" in pol.to_string()
+    assert QuantPolicy.from_string(pol.to_string()).kv_spec == FXP8
+    # pofx spec + default: no kv rule -> None
+    assert QuantPolicy.from_string("kv=pofx8es2").kv_spec == POFX8
+    assert QuantPolicy.from_string("*=pofx8es2").kv_spec is None
+
+
+def test_kv_rule_never_matches_parameter_paths():
+    pol = QuantPolicy.from_string("kv=fxp8,*=pofx8es2")
+    # even a parameter path literally named kv must not hit the kv rule
+    for name in ("blocks/attn/wq", "kv", "blocks/kv"):
+        rule = pol.match_rule(name)
+        assert rule is not None and rule[0] == "*"
+
+
+def test_kv_rule_validation():
+    with pytest.raises(ValueError, match="fxp or pofx"):
+        QuantPolicy.from_string("kv=posit8es2")
+    with pytest.raises(ValueError, match="byte-wide"):
+        QuantPolicy.from_string("kv=fxp16")
+    with pytest.raises(ValueError, match="duplicate"):
+        QuantPolicy.from_string("kv=fxp8,kv=pofx8es2")
+    # bf16/fp32/keep normalize to "unquantized"
+    assert QuantPolicy.from_string("kv=bf16,*=pofx8es2").kv_spec is None
+    assert validate_kv_spec(None) is None
+    assert validate_kv_spec(QuantSpec(kind="bf16")) is None
+
+
+def test_kv_preset_and_resolve():
+    pol = QuantPolicy.from_string("paper-table6-kv8")
+    assert pol.kv_spec == FXP8
+    assert format_spec(pol.match("embed")) == "bf16"  # embed rule applies
+    assert resolve_kv_spec("auto", pol) == FXP8
+    assert resolve_kv_spec("none", pol) is None
+    assert resolve_kv_spec("pofx8es2", pol) == POFX8
+    assert "paper-table6-kv8" in PRESETS
+
+
+# ---------------------------------------------------------------------------
+# 4D quantize/dequantize helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [FXP8, QuantSpec(kind="fxp", M=8, F=4),
+                                  POFX8, QuantSpec(kind="pofx", N=6, ES=1)])
+def test_kv_quantize_4d_roundtrip(spec):
+    rng = np.random.default_rng(0)
+    # keep |x/scale| < 0.9: inside every tested format's exactly-covered
+    # range, so the roundtrip error is grid-sized, not saturation-sized
+    x = jnp.asarray(rng.uniform(-0.9, 0.9, (2, 3, 5, 16)), jnp.float32)
+    scale = jnp.asarray(np.exp2(rng.integers(0, 2, (2, 3, 1, 16))),
+                        jnp.float32)
+    codes = kv_quantize(x * scale, spec, scale)
+    assert codes.dtype == kv_code_dtype(spec)
+    assert codes.shape == x.shape
+    y = kv_dequantize(codes, spec, scale) / scale
+    # coarsest step among the tested formats: fxp8f4 -> 2^-4; pofx(6,1)
+    # tapers to ~2^-3 ulps near |1| — grid-sized, not layout-bug-sized
+    assert float(jnp.abs(y - x).max()) < 0.2
+    assert float(jnp.abs(y - x).mean()) < 0.05
+    # determinism: same floats -> same codes (the resume contract)
+    np.testing.assert_array_equal(
+        np.asarray(codes), np.asarray(kv_quantize(x * scale, spec, scale)))
+
+
+def test_kv_quantize_rejects_non_code_kinds():
+    with pytest.raises(ValueError, match="kv code path"):
+        kv_quantize(jnp.ones((2, 2)), QuantSpec(kind="posit", N=8, ES=2), 1.0)
+    with pytest.raises(ValueError, match="decode path"):
+        kv_dequantize(jnp.ones((2, 2), jnp.int8), QuantSpec(kind="bf16"), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation and logical axes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "moonshot-v1-16b-a3b",
+                                  "zamba2-1.2b"])
+def test_init_cache_code_and_scale_leaves(arch):
+    cfg = smoke(ARCHS[arch])
+    model = _model(cfg, RunConfig(remat="none"), kv_spec=FXP8)
+    cache = model.init_cache(2, 16)
+    kv = cache["kv"]["moe"] if cfg.family == "moe" else (
+        cache["shared_kv"] if cfg.family == "hybrid" else cache["kv"])
+    assert kv["k"].dtype == jnp.int8 and kv["v"].dtype == jnp.int8
+    assert kv["k_scale"].dtype == jnp.float32
+    assert kv["k_scale"].shape[-2:] == (1, cfg.d_head)
+    # cache and cache_logical must agree leaf-for-leaf (the engine scatter
+    # zips them positionally)
+    n = len(jax.tree_util.tree_leaves(cache))
+    log = jax.tree_util.tree_flatten(model.cache_logical(),
+                                     is_leaf=lambda x: isinstance(x, tuple))[0]
+    # hybrid/moe caches may be larger than the logical template only if
+    # the template covers every leaf 1:1
+    assert n == len(log)
+
+
+def test_init_cache_kv_spec_override(dense_parts):
+    cfg, rcfg, params = dense_parts
+    model = _model(cfg, rcfg)             # model default: unquantized
+    cache = model.init_cache(1, 8, kv_spec=FXP8)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    model_q = _model(cfg, rcfg, kv_spec=POFX8)
+    assert model_q.init_cache(1, 8)["kv"]["k"].dtype == jnp.uint8
+    assert model_q.init_cache(1, 8, kv_spec=None)["kv"]["k"].dtype == jnp.bfloat16
+    # the override is allocation-only: consuming a cache whose layout
+    # disagrees with the model's kv_spec must fail loudly, not silently
+    # astype float K/V into the int8 code leaves
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="disagrees"):
+        model.prefill(params, toks, cache=cache)
+    with pytest.raises(ValueError, match="disagrees"):
+        model_q.prefill(params, toks, cache=model_q.init_cache(1, 8, kv_spec=None))
+    with pytest.raises(ValueError, match="code dtype"):
+        model_q.decode_step(params, model_q.init_cache(1, 8, kv_spec=FXP8),
+                            jnp.zeros((1, 1), jnp.int32))
+
+
+def test_validate_kv_spec_rejects_nontrunc_pofx_rounding():
+    # the kernel's bit-level VPU decode truncates; a nearest-rounding pofx
+    # spec would make kernel and XLA fallback silently disagree per code
+    with pytest.raises(ValueError, match="trunc"):
+        validate_kv_spec(QuantSpec(kind="pofx", N=8, ES=2, rounding="nearest"))
+
+
+def test_init_cache_rejects_encdec_kv_quant():
+    cfg = smoke(ARCHS["whisper-medium"])
+    model = _model(cfg, RunConfig(remat="none"), kv_spec=FXP8)
+    with pytest.raises(ValueError, match="encdec"):
+        model.init_cache(1, 16)
+
+
+def test_kv_decode_bytes_per_token_model():
+    cfg = smoke(ARCHS["yi-9b"])
+    bf16 = kv_decode_bytes_per_token(cfg, 128, None)
+    q = kv_decode_bytes_per_token(cfg, 128, FXP8)
+    assert bf16["code_bytes"] == 2 * q["code_bytes"]  # 2 bytes -> 1 byte
+    assert bf16["scale_bytes"] == 0 and q["scale_bytes"] > 0
+    # S-proportional: doubling context doubles the code term only
+    q2 = kv_decode_bytes_per_token(cfg, 256, FXP8)
+    assert q2["code_bytes"] == 2 * q["code_bytes"]
+    assert q2["scale_bytes"] == q["scale_bytes"]
+    assert kv_decode_bytes_per_token(
+        smoke(ARCHS["falcon-mamba-7b"]), 128, FXP8)["code_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Model level: prefill+decode through codes; kernel == XLA fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [FXP8, POFX8])
+def test_decode_kernel_matches_xla_fallback(dense_parts, spec):
+    cfg, rcfg, params = dense_parts
+    toks = jnp.asarray(_prompt(0, 6, cfg.vocab_size))[None]
+    logits = {}
+    for kern in (False, True):
+        model = _model(cfg, rcfg, kv_spec=spec, kv_kernel=kern)
+        cache = model.init_cache(1, 16)
+        cache, lg = model.prefill(params, toks, cache=cache)
+        for _ in range(3):
+            cache, lg = model.decode_step(params, cache,
+                                          jnp.argmax(lg, -1)[:, None])
+        logits[kern] = np.asarray(lg, np.float32)
+    np.testing.assert_allclose(logits[True], logits[False],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_quantized_cache_stays_near_unquantized(dense_parts):
+    """Sanity: a quantized cache whose static range covers the K/V values
+    (fxp8f4: +/-8 at 1/16 resolution — random-init K/V here are ~unit
+    scale, outside fxp8f7's +/-1) tracks the bf16-cache logits; the error
+    must be quantization-sized, not garbage-sized (catches scale/layout
+    bugs)."""
+    cfg, rcfg, params = dense_parts
+    toks = jnp.asarray(_prompt(1, 8, cfg.vocab_size))[None]
+    out = {}
+    for spec in (None, QuantSpec(kind="fxp", M=8, F=4)):
+        model = _model(cfg, rcfg, kv_spec=spec)
+        cache, lg = model.prefill(params, toks, cache=model.init_cache(1, 16))
+        cache, lg = model.decode_step(params, cache,
+                                      jnp.argmax(lg, -1)[:, None])
+        out[spec is None] = np.asarray(lg, np.float32)
+    err = np.abs(out[True] - out[False]).mean()
+    spread = np.abs(out[True]).mean()
+    assert err < 0.5 * spread, (err, spread)
+
+
+# ---------------------------------------------------------------------------
+# Engine: resume bit-identity and kernel/fallback token identity
+# ---------------------------------------------------------------------------
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk", 3)
+    kw.setdefault("seed", 0)
+    return ServeEngine(model, params, **kw)
+
+
+@pytest.mark.parametrize("spec", [FXP8, POFX8])
+def test_engine_evict_resume_bit_identity_quantized(dense_parts, spec):
+    """Quantize-on-write is lossy, so resume must reproduce the CODES the
+    evicted request decoded against — static per-channel scales plus
+    fake-quant prefill make re-prefill(prompt+prefix) regenerate them
+    bit-identically, and the resumed sample stream must match the
+    uninterrupted run exactly."""
+    cfg, rcfg, params = dense_parts
+    model = _model(cfg, rcfg, kv_spec=spec)
+    reqs = lambda: [_req(i, cfg.vocab_size, max_new=7, temp=0.7, top_k=8)
+                    for i in range(3)]
+    ref = {s.req.rid: s.out for s in _engine(model, params).run(reqs())}
+
+    eng = _engine(model, params)
+    for r in reqs():
+        eng.submit(r)
+    eng.admit_ready()
+    eng.step()
+    victim = eng.active_rids[0]
+    eng.evict(victim)
+    while eng.pending_rids or eng.active_rids:
+        eng.admit_ready()
+        eng.step()
+    got = {rid: st.out for rid, st in eng._states.items()}
+    assert got == ref
+    assert eng._states[victim].n_evictions == 1
+
+
+def test_engine_greedy_token_identical_kernel_vs_fallback(dense_parts):
+    """The acceptance contract: greedy outputs must be token-identical
+    between the fused flash-decode kernel and the XLA
+    quantize-on-write/dequantize-on-read fallback at the same spec."""
+    cfg, rcfg, params = dense_parts
+    outs = {}
+    for kern in (False, True):
+        model = _model(cfg, rcfg, kv_spec=FXP8, kv_kernel=kern)
+        done = _engine(model, params).run(
+            [_req(i, cfg.vocab_size, max_new=6, arrival=float(i))
+             for i in range(3)])
+        outs[kern] = {s.req.rid: s.out for s in done}
+    assert outs[True] == outs[False]
+
+
+def test_engine_preserves_calibrated_kv_scales(dense_parts):
+    """Calibrated static scales (written before serving, DESIGN.md §8) must
+    survive admission: the batch-1 prefill cache seeds its scale leaves
+    from the slot instead of resetting them to init_cache's 1.0, and the
+    scatter writes the same calibrated values back."""
+    cfg, rcfg, params = dense_parts
+    model = _model(cfg, rcfg, kv_spec=FXP8)
+    codes = {}
+    for cal in (1.0, 2.0):
+        eng = _engine(model, params)
+        eng.cache = jax.tree_util.tree_map_with_path(
+            lambda p, x: jnp.full_like(x, cal)
+            if getattr(p[-1], "key", "").endswith("_scale") else x,
+            eng.cache)
+        eng.run([_req(i, cfg.vocab_size, max_new=5) for i in range(3)])
+        kv = eng.cache["kv"]
+        np.testing.assert_array_equal(np.asarray(kv["k_scale"]), cal)
+        np.testing.assert_array_equal(np.asarray(kv["v_scale"]), cal)
+        codes[cal] = np.asarray(kv["k"])
+    # the scale actually reaches quantize-on-write: the same K floats
+    # normalized by 2x produce different codes
+    assert not np.array_equal(codes[1.0], codes[2.0])
+
+
+def test_engine_chunk_and_slot_invariance_quantized(dense_parts):
+    cfg, rcfg, params = dense_parts
+    model = _model(cfg, rcfg, kv_spec=FXP8)
+    mk = lambda: [_req(i, cfg.vocab_size, max_new=5, temp=0.5, top_k=4,
+                       arrival=float(i)) for i in range(3)]
+    outs = []
+    for slots, chunk in ((2, 1), (2, 4), (3, 2)):
+        eng = _engine(model, params, n_slots=slots, chunk=chunk)
+        outs.append({s.req.rid: s.out for s in eng.run(mk())})
+    assert all(o == outs[0] for o in outs[1:])
+
+
+@pytest.mark.parametrize("arch", ["moonshot-v1-16b-a3b", "zamba2-1.2b"])
+def test_engine_other_families_quantized(arch):
+    """MoE (extra stacking dims) and hybrid (shared attention block) caches
+    scatter/serve with code+scale leaves."""
+    cfg = smoke(ARCHS[arch])
+    model = _model(cfg, RunConfig(remat="none"), kv_spec=FXP8)
+    params = model.init(jax.random.PRNGKey(0))
+    done = ServeEngine(model, params, n_slots=2, max_len=24, chunk=3).run(
+        [_req(i, cfg.vocab_size, max_new=4, arrival=float(2 * i))
+         for i in range(3)])
+    for s in done:
+        assert len(s.out) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in s.out)
+
+
+def test_engine_kv_quant_with_weight_kernels_smoke(dense_parts):
+    """Everything on: pofx weights through the Pallas matmul kernels AND
+    the quantized cache through the flash-decode kernel."""
+    cfg, rcfg, _ = dense_parts
+    from repro.nn.models import apply_policy
+    model = _model(cfg, rcfg, kv_spec=FXP8, use_kernel=True)
+    params = apply_policy(model.init(jax.random.PRNGKey(0)), "pofx8")
+    done = _engine(model, params, max_len=16).run(
+        [_req(i, cfg.vocab_size, max_new=3, n=6) for i in range(2)])
+    for s in done:
+        assert len(s.out) == 3
