@@ -15,11 +15,12 @@ from repro.core.pofx import pofx_normalized
 from .common import jaxpr_ops, wall_time, write_csv
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
-    n_codes = 1 << 18
-    for N in (5, 6, 7, 8):
-        for ES in (0, 1, 2, 3):
+    n_codes = 1 << 12 if smoke else 1 << 18
+    # smoke keeps the grid corners the claims read: (4,2,*) and (7,2,*)
+    for N in ((5, 8) if smoke else (5, 6, 7, 8)):
+        for ES in ((2,) if smoke else (0, 1, 2, 3)):
             codes = jnp.asarray(
                 np.random.default_rng(N * 10 + ES).integers(0, 1 << (N - 1),
                                                             n_codes),

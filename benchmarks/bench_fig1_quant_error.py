@@ -15,8 +15,10 @@ from repro.core.posit import posit_decode_np, posit_encode_np
 from .common import avg_abs_rel_error, vgg_like_weights, write_csv
 
 
-def run():
-    w = vgg_like_weights()
+def run(smoke: bool = False):
+    # smoke (benchmarks.run --smoke / tests/test_bench_smoke.py): same
+    # sweep on a smaller weight sample — exercises every code path cheaply
+    w = vgg_like_weights(1 << 12 if smoke else 1 << 16)
     rows = []
     for M in (7, 8, 16):
         wq = fxp.fxp_dequantize_np(fxp.fxp_quantize_np(w, M, M - 1), M - 1)

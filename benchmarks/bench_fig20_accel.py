@@ -32,9 +32,11 @@ from repro.kernels.pofx_matmul import pofx_matmul
 from .common import wall_time, write_csv
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
-    K, N_out, B = 64, 10, 1000        # the paper's accelerator + 1000 acts
+    # the paper's accelerator + 1000 acts (smoke: fewer activations only —
+    # the bit-accounting columns are size-exact either way)
+    K, N_out, B = 64, 10, (128 if smoke else 1000)
     w = jnp.asarray(rng.normal(0, 0.1, (K, N_out)), jnp.float32)
     x = jnp.asarray(rng.normal(0, 1.0, (B, K)), jnp.float32)
     spec = QuantSpec(kind="pofx", N=6, ES=0, M=8)     # paper Fig 20 config

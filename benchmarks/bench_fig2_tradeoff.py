@@ -23,15 +23,16 @@ SPEC_STRINGS = ("fp32", "bf16", "fxp8@tensor", "fxp16@tensor",
                 "pofx8es2@tensor", "pofx6es2@tensor")
 
 
-def run(extra_specs=()):
-    w = vgg_like_weights(1 << 18)
+def run(extra_specs=(), smoke: bool = False):
+    size = 1 << 13 if smoke else 1 << 18
+    w = vgg_like_weights(size)
     rows = []
     # extra specs get the same per-tensor normalizer unless one is named
     # explicitly — this bench's weight buffer is 1-D, where the default
     # channel scale degenerates to one fp32 scale per weight.
     extras = tuple(s if "@" in s else s + "@tensor" for s in extra_specs)
     specs = [parse_spec(s) for s in (*SPEC_STRINGS, *extras)]
-    codes8 = jnp.asarray(np.random.default_rng(0).integers(0, 128, 1 << 18),
+    codes8 = jnp.asarray(np.random.default_rng(0).integers(0, 128, size),
                          jnp.int32)
     for spec in specs:
         name = spec_name(spec)

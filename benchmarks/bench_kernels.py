@@ -17,12 +17,15 @@ from repro.kernels.ref import fxp_matmul_ref, pofx_decode_ref, pofx_matmul_ref
 from .common import wall_time, write_csv
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     rows = []
-    # decode kernel sweep
-    for (r, c) in ((128, 256), (257, 130), (512, 512)):
-        for N, ES in ((8, 2), (6, 1)):
+    # decode kernel sweep (smoke keeps one ragged + one aligned shape —
+    # the tail-tile masking is the path that rots)
+    dec_shapes = ((128, 256), (257, 130)) if smoke \
+        else ((128, 256), (257, 130), (512, 512))
+    for (r, c) in dec_shapes:
+        for N, ES in (((8, 2),) if smoke else ((8, 2), (6, 1))):
             codes = jnp.asarray(rng.integers(0, 1 << (N - 1), (r, c)),
                                 jnp.int32)
             out = pofx_decode(codes, N, ES, 8, block=(128, 128), interpret=True)
@@ -35,7 +38,8 @@ def run():
                              interpret=True), reps=2) * 1e6})
             assert ok
     # fused matmul sweep
-    for (m, k, n) in ((64, 128, 96), (130, 257, 66)):
+    for (m, k, n) in (((64, 128, 96),) if smoke
+                      else ((64, 128, 96), (130, 257, 66))):
         x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         codes = jnp.asarray(rng.integers(0, 128, (k, n)), jnp.int32)
         scale = jnp.asarray(rng.uniform(0.5, 2.0, (n,)), jnp.float32)

@@ -27,11 +27,12 @@ Rows land in experiments/bench/serve_engine.csv. Run standalone
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, RunConfig, smoke
+from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
 from repro.core.policy import format_spec, parse_kv_spec
 from repro.launch.engine import Request, SamplingParams, ServeEngine
 from repro.nn.models import (apply_policy, build_model,
@@ -40,45 +41,57 @@ from repro.nn.models import (apply_policy, build_model,
 from .common import write_csv
 
 ARCH = "yi-9b"
-N_REQ = 8
-SLOTS = 4
-PROMPT = 32
-GEN = 16
-CHUNK = 8
-LONG_PROMPT = 96          # "long" for a CPU smoke model; the modeled
-LONG_GEN = 16             # bytes/token ratio is context-length-invariant
 
 
-def _mix_requests(mix: str, vocab: int) -> list:
+@dataclasses.dataclass(frozen=True)
+class Sizes:
+    n_req: int = 8
+    slots: int = 4
+    prompt: int = 32
+    gen: int = 16
+    chunk: int = 8
+    long_prompt: int = 96     # "long" for a CPU smoke model; the modeled
+    long_gen: int = 16        # bytes/token ratio is context-length-invariant
+
+
+FULL = Sizes()
+# --smoke / tests/test_bench_smoke.py: every mix, variant and claim still
+# runs — just few enough tokens that bench bit-rot fails in CI seconds
+SMOKE = Sizes(n_req=4, slots=2, prompt=8, gen=6, chunk=4,
+              long_prompt=16, long_gen=4)
+
+
+def _mix_requests(mix: str, vocab: int, sz: Sizes) -> list:
     rng = np.random.default_rng(0)
     reqs = []
-    for i in range(N_REQ):
-        gen = GEN
+    for i in range(sz.n_req):
+        gen = sz.gen
         arrival = 0.0
         if mix == "staggered":
-            arrival = float(i * (GEN // 2))
+            arrival = float(i * (sz.gen // 2))
         elif mix == "ragged":
-            gen = GEN // 2 if i % 2 else GEN
+            gen = sz.gen // 2 if i % 2 else sz.gen
         reqs.append(Request(
-            rid=i, prompt=rng.integers(0, vocab, PROMPT), max_new=gen,
+            rid=i, prompt=rng.integers(0, vocab, sz.prompt), max_new=gen,
             sampling=SamplingParams(), arrival=arrival))
     return reqs
 
 
-def _longctx_requests(vocab: int) -> list:
+def _longctx_requests(vocab: int, sz: Sizes) -> list:
     rng = np.random.default_rng(3)
-    return [Request(rid=i, prompt=rng.integers(0, vocab, LONG_PROMPT),
-                    max_new=LONG_GEN, sampling=SamplingParams(),  # greedy
-                    arrival=float(i * (LONG_GEN // 2)))
-            for i in range(N_REQ)]
+    return [Request(rid=i, prompt=rng.integers(0, vocab, sz.long_prompt),
+                    max_new=sz.long_gen, sampling=SamplingParams(),  # greedy
+                    arrival=float(i * (sz.long_gen // 2)))
+            for i in range(sz.n_req)]
 
 
-def _run_longctx(cfg, params, kv_spec, kv_kernel, use_kernel):
+def _run_longctx(cfg, params, kv_spec, kv_kernel, use_kernel, sz: Sizes):
     model = build_model(cfg, RunConfig(remat="none"), use_kernel=use_kernel,
                         kv_spec=kv_spec, kv_kernel=kv_kernel)
-    engine = ServeEngine(model, params, n_slots=SLOTS,
-                         max_len=LONG_PROMPT + LONG_GEN, chunk=CHUNK, seed=0)
-    done = engine.run(_longctx_requests(cfg.vocab_size))
+    engine = ServeEngine(model, params, n_slots=sz.slots,
+                         max_len=sz.long_prompt + sz.long_gen, chunk=sz.chunk,
+                         seed=0)
+    done = engine.run(_longctx_requests(cfg.vocab_size, sz))
     st = engine.stats()
     outs = {s.req.rid: list(s.out) for s in done}
     return st, outs
@@ -97,24 +110,25 @@ def _longctx_kv_spec(kv_quant: str):
     return kv_spec
 
 
-def run_longctx(cfg, params, kv_spec, use_kernel: bool):
+def run_longctx(cfg, params, kv_spec, use_kernel: bool, sz: Sizes = FULL):
     """Long-context arrival mix: bf16 cache vs quantized cache (XLA
     fallback and fused kernel). Returns (rows, claims)."""
-    ctx_len = LONG_PROMPT + LONG_GEN
+    ctx_len = sz.long_prompt + sz.long_gen
     bf16 = kv_decode_bytes_per_token(cfg, ctx_len, None)
     rows, outs_by_variant = [], {}
     variants = [("bf16", None, False),
                 ("xla-fallback", kv_spec, False),
                 ("fused-kernel", kv_spec, True)]
     for name, spec, kern in variants:
-        st, outs = _run_longctx(cfg, params, spec, kern, use_kernel)
+        st, outs = _run_longctx(cfg, params, spec, kern, use_kernel, sz)
         if spec is not None:   # identity check is kernel-vs-fallback only
             outs_by_variant[name] = outs
         traffic = kv_decode_bytes_per_token(cfg, ctx_len, spec)
         rows.append({
             "mix": "longctx", "arch": ARCH, "quant": "(shared)",
-            "use_kernel": use_kernel, "slots": SLOTS, "requests": N_REQ,
-            "prompt_len": LONG_PROMPT, "gen": LONG_GEN,
+            "use_kernel": use_kernel, "slots": sz.slots,
+            "requests": sz.n_req,
+            "prompt_len": sz.long_prompt, "gen": sz.long_gen,
             "generated_tokens": st["generated_tokens"],
             "decode_steps": st["decode_steps"],
             "decode_tok_per_s": round(
@@ -143,25 +157,27 @@ def run_longctx(cfg, params, kv_spec, use_kernel: bool):
 
 
 def run(use_kernel: bool = False, quant: str = "pofx8",
-        kv_quant: str = "fxp8"):
+        kv_quant: str = "fxp8", smoke: bool = False):
+    sz = SMOKE if smoke else FULL
     kv_spec = _longctx_kv_spec(kv_quant)   # fail fast, before engine work
-    cfg = smoke(ARCHS[ARCH])
+    cfg = smoke_cfg(ARCHS[ARCH])
     model = build_model(cfg, RunConfig(remat="none"), use_kernel=use_kernel)
     params = apply_policy(model.init(jax.random.PRNGKey(0)), quant)
     rng = np.random.default_rng(7)
     rows = []
     for mix in ("burst", "staggered", "ragged"):
-        reqs = _mix_requests(mix, cfg.vocab_size)
-        engine = ServeEngine(model, params, n_slots=SLOTS,
-                             max_len=PROMPT + GEN, chunk=CHUNK, seed=0)
+        reqs = _mix_requests(mix, cfg.vocab_size, sz)
+        engine = ServeEngine(model, params, n_slots=sz.slots,
+                             max_len=sz.prompt + sz.gen, chunk=sz.chunk,
+                             seed=0)
         # warmup on the SAME engine (jit caches are per-instance): compile
         # prefill + the chunk variants outside the timed run, else the
         # first mix absorbs all XLA compile time and the mix comparison
         # becomes a measurement artifact
         engine.run([Request(rid=1000 + i,
-                            prompt=rng.integers(0, cfg.vocab_size, PROMPT),
-                            max_new=GEN, sampling=SamplingParams())
-                    for i in range(SLOTS)])
+                            prompt=rng.integers(0, cfg.vocab_size, sz.prompt),
+                            max_new=sz.gen, sampling=SamplingParams())
+                    for i in range(sz.slots)])
         engine.prefill_time = engine.decode_time = 0.0
         engine.decode_steps = 0
         engine.clock = 0.0  # warmup must not shift the measured arrivals
@@ -173,8 +189,9 @@ def run(use_kernel: bool = False, quant: str = "pofx8",
         n_dec = n_gen - (engine.n_prefill_sampled - warm_sampled)
         rows.append({
             "mix": mix, "arch": ARCH, "quant": quant,
-            "use_kernel": use_kernel, "slots": SLOTS, "requests": N_REQ,
-            "prompt_len": PROMPT, "gen": GEN,
+            "use_kernel": use_kernel, "slots": sz.slots,
+            "requests": sz.n_req,
+            "prompt_len": sz.prompt, "gen": sz.gen,
             "generated_tokens": n_gen,
             "decode_steps": st["decode_steps"],
             "decode_tok_per_s": round(n_dec / max(st["decode_time_s"], 1e-9),
@@ -191,7 +208,8 @@ def run(use_kernel: bool = False, quant: str = "pofx8",
     # persist the arrival mixes before the longctx runs: the loud
     # kernel-vs-fallback identity assertion must not discard them
     write_csv("serve_engine", rows)
-    long_rows, long_claims = run_longctx(cfg, params, kv_spec, use_kernel)
+    long_rows, long_claims = run_longctx(cfg, params, kv_spec, use_kernel,
+                                         sz)
     rows += long_rows
     claims.update(long_claims)
     write_csv("serve_engine", rows)
@@ -205,9 +223,11 @@ def main(argv=None):
     ap.add_argument("--kv-quant", default="fxp8",
                     help="KV-cache format for the longctx mix (fxp/pofx, "
                          "byte-wide codes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: bit-rot check, not a measurement")
     args = ap.parse_args(argv)
     rows, claims = run(use_kernel=args.use_kernel, quant=args.quant,
-                       kv_quant=args.kv_quant)
+                       kv_quant=args.kv_quant, smoke=args.smoke)
     for r in rows:
         print(r)
     for k, v in claims.items():

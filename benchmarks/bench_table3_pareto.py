@@ -19,7 +19,7 @@ from repro.core.quantizers import QuantSpec, quantize, storage_bits
 from .common import avg_abs_rel_error, jaxpr_ops, vgg_like_weights, write_csv
 
 
-def _points():
+def _points(smoke: bool = False):
     """Each point: (category, name, avg_err, bits/weight, MAC cost).
 
     MAC-cost model follows the paper's Fig 14/15 structure: the posit-only
@@ -28,8 +28,9 @@ def _points():
     then runs integer multiply-add, the FxP MAC is integer-only.
     """
     import dataclasses
-    w = vgg_like_weights(1 << 16)
-    codes = jnp.asarray(np.arange(1 << 12) % 16, jnp.int32)
+    w = vgg_like_weights(1 << 12 if smoke else 1 << 16)
+    codes = jnp.asarray(np.arange(1 << 8 if smoke else 1 << 12) % 16,
+                        jnp.int32)
     int_mac = 2  # mul + add
 
     def q(spec):
@@ -60,8 +61,8 @@ def _points():
     return pts
 
 
-def run():
-    pts = _points()
+def run(smoke: bool = False):
+    pts = _points(smoke)
     obj = np.array([[p[2], p[3], p[4]] for p in pts])
     mask = pareto_mask(obj)
     rows = [{"category": p[0], "scheme": p[1], "avg_rel": p[2],

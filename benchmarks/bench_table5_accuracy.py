@@ -65,10 +65,13 @@ def _accuracy(fwd, params, x, y) -> float:
     return float(jnp.mean(pred == y))
 
 
-def run(extra_specs=()):
-    x, y = _task()
-    n_tr = 3072
-    params, fwd = _train_mlp(x[:n_tr], y[:n_tr], 10)
+def run(extra_specs=(), smoke: bool = False):
+    # smoke: smaller task + shorter training — the config sweep and every
+    # claim key still compute, just on a weaker (still converged) MLP
+    x, y = _task(n=1024 if smoke else 4096)
+    n_tr = 768 if smoke else 3072
+    params, fwd = _train_mlp(x[:n_tr], y[:n_tr], 10,
+                             steps=80 if smoke else 300)
     xte, yte = x[n_tr:], y[n_tr:]
     base_acc = _accuracy(fwd, params, xte, yte)
 

@@ -18,11 +18,11 @@ from .common import decode_fn, jaxpr_ops, vgg_like_weights, write_csv
 from . import bench_table5_accuracy as t5
 
 
-def run(extra_specs=()):
-    acc_rows, _ = t5.run(extra_specs=extra_specs)
+def run(extra_specs=(), smoke: bool = False):
+    acc_rows, _ = t5.run(extra_specs=extra_specs, smoke=smoke)
     acc = {r["config"]: r["accuracy"] for r in acc_rows}
-    w = vgg_like_weights(1 << 14)
-    codes = jnp.asarray(np.arange(4096) % 32, jnp.int32)
+    w = vgg_like_weights(1 << 11 if smoke else 1 << 14)
+    codes = jnp.asarray(np.arange(256 if smoke else 4096) % 32, jnp.int32)
     rows = []
 
     def cost(spec):

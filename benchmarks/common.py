@@ -59,8 +59,11 @@ def decode_fn(spec):
 
 
 def write_csv(name: str, rows: List[Dict]) -> str:
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, f"{name}.csv")
+    # REPRO_BENCH_OUT redirects artifacts (tests/test_bench_smoke.py writes
+    # to a tmp dir so smoke rows never clobber the committed CSVs)
+    out_dir = os.environ.get("REPRO_BENCH_OUT") or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.csv")
     if not rows:
         return path
     # union of keys in first-seen order: mixes may report extra columns

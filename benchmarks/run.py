@@ -38,6 +38,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench name substrings")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny inputs for every bench that supports them — "
+                         "a bit-rot check (tests/test_bench_smoke.py runs "
+                         "this per bench in CI), not a measurement")
     add_policy_arg(ap, default="",
                    extra_help="extra spec strings appended to the "
                               "format-sweeping benches")
@@ -55,8 +59,11 @@ def main(argv=None) -> int:
         try:
             mod = __import__(module, fromlist=["run"])
             kwargs = {}
-            if "extra_specs" in inspect.signature(mod.run).parameters:
+            sig = inspect.signature(mod.run).parameters
+            if "extra_specs" in sig:
                 kwargs["extra_specs"] = extra_specs
+            if args.smoke and "smoke" in sig:
+                kwargs["smoke"] = True
             rows, claims = mod.run(**kwargs)
             dt = time.time() - t0
             print(f"=== {name}: {len(rows)} rows in {dt:.1f}s")

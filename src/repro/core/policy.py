@@ -59,6 +59,7 @@ __all__ = [
     "add_policy_arg",
     "add_kv_quant_arg",
     "resolve_kv_spec",
+    "validate_scale_sharding",
 ]
 
 # Reserved rule name: "kv=<spec>" configures the decode KV-cache format
@@ -250,6 +251,50 @@ PRESETS: Dict[str, str] = {
     # whole serving HBM story — weight codes AND cache codes — in one string.
     "paper-table6-kv8": "embed=bf16,unembed=bf16,kv=fxp8,*=pofx8es2",
 }
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel sharding validity (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def validate_scale_sharding(name: str, codes_shape, scale_shape, codes_spec):
+    """Scale PartitionSpec for a QuantizedTensor whose codes shard as
+    ``codes_spec`` — the sharding-validity check for per-channel scales.
+
+    A quantized leaf may shard along an axis only if its scale leaf is
+    *congruent* there: broadcast (size 1 — per-tensor, or per-channel along
+    a different axis) or exactly per-channel along the sharded axis (same
+    size as the codes dim, e.g. an MLP up-projection's (1, d_ff) scale
+    sharded with its (d, d_ff) codes). Anything else — a scale that varies
+    along the sharded axis at a different granularity — cannot be split
+    consistently with its codes and raises. Scales align against codes
+    like NumPy broadcasting (trailing dims), so a lower-rank scale simply
+    replicates over the missing leading dims.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    spec = tuple(codes_spec) + (None,) * (len(codes_shape) - len(codes_spec))
+    if len(scale_shape) > len(codes_shape):
+        raise ValueError(
+            f"cannot shard quantized leaf {name!r}: scale rank "
+            f"{len(scale_shape)} exceeds codes rank {len(codes_shape)}")
+    off = len(codes_shape) - len(scale_shape)
+    out = []
+    for j, sdim in enumerate(scale_shape):
+        i = j + off
+        axis = spec[i]
+        if axis is None or sdim == 1:
+            out.append(None)
+        elif sdim == codes_shape[i]:
+            out.append(axis)            # per-channel scale shards with codes
+        else:
+            raise ValueError(
+                f"cannot shard quantized leaf {name!r} along dim {i}: the "
+                f"per-channel scale has size {sdim} there but the codes "
+                f"have {codes_shape[i]} — the scale axis must match the "
+                f"sharded axis exactly (or broadcast with size 1)")
+    return P(*out)
 
 
 # ---------------------------------------------------------------------------

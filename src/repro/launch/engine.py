@@ -36,10 +36,22 @@ layout-agnostic — admission scatters code+scale leaves along the batch
 axis ``LM.cache_logical`` names, and eviction's re-prefill regenerates the
 identical codes (static scales + fake-quant prefill), so the
 resume-identical guarantee survives the lossy cache.
+
+So, finally, is tensor parallelism (DESIGN.md §9): a model built over the
+1-D ``("tp",)`` serving mesh (``build_model(..., mesh=make_tp_mesh(N))``)
+makes the engine device_put parameters and the slot cache sharded —
+attention heads, MLP hidden, experts, and the KV cache's head axis (codes
+AND static scales) split over tp — and run prefill + the chunked decode
+scan inside ``shard_map`` with the model's ``manual_tp`` twin (explicit
+one-psum-per-block collectives). Tokens, slot keys, sampling params and
+``pos`` stay replicated, so every scheduler decision below — admit, evict,
+resume, per-slot stopping — is device-count-agnostic and the served token
+streams are the single-device streams.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence
@@ -47,6 +59,7 @@ from typing import Any, Deque, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["SamplingParams", "Request", "RequestState", "ServeEngine",
            "sample_tokens"]
@@ -142,6 +155,14 @@ class ServeEngine:
         self.chunk = int(chunk)
         self.prompt_bucket = max(1, int(prompt_bucket))
 
+        # Tensor parallelism: a model built over the ("tp",) serving mesh
+        # serves sharded. ``_mm`` is the model the jitted device functions
+        # call — the manual_tp twin inside shard_map, the model itself
+        # otherwise. Scheduler state below never looks at tp.
+        self.tp = model.tp_size
+        self._mm = model.manual_tp() if self.tp > 1 else model
+        self._mesh = model.ctx.mesh if self.tp > 1 else None
+
         self.cache = model.init_cache(n_slots, max_len)
         self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
         self._cache_log_flat = jax.tree_util.tree_flatten(
@@ -156,6 +177,16 @@ class ServeEngine:
                 f"cache has {n_leaves} leaves but cache_logical names "
                 f"{len(self._cache_log_flat)}; LM.init_cache and "
                 "LM.cache_logical disagree")
+        if self.tp > 1:
+            self._param_specs = model.param_tp_specs(params)
+            self._cache_specs = model.cache_tp_specs(self.cache)
+            self._small_specs = model.cache_tp_specs(
+                jax.eval_shape(lambda: model.init_cache(1, self.max_len)))
+            put = lambda tree, specs: jax.device_put(
+                tree, jax.tree.map(
+                    lambda s: NamedSharding(self._mesh, s), specs))
+            self.params = put(self.params, self._param_specs)
+            self.cache = put(self.cache, self._cache_specs)
         self._tok = jnp.full((n_slots, 1), self.pad_id, jnp.int32)
         self._base_key = jax.random.PRNGKey(seed)
         # placeholder slot keys (replaced at admit; fold stream disjoint
@@ -178,14 +209,12 @@ class ServeEngine:
         #    the exact complement of decode-generated tokens)
 
         self._chunk_fn = jax.jit(
-            self._chunk_impl,
+            self._chunk_wrap,
             static_argnames=("steps", "eos", "pad", "greedy_only",
                              "topk_any"),
             donate_argnums=(1,))
         self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
-        self._prefill_fn = jax.jit(
-            lambda p, c, t, l: model.prefill(p, t, cache=c, length=l),
-            donate_argnums=(1,))
+        self._prefill_fn = jax.jit(self._prefill_wrap, donate_argnums=(1,))
         self._sample_fn = jax.jit(sample_tokens)
 
     # -- scheduler (host) ----------------------------------------------------
@@ -313,6 +342,54 @@ class ServeEngine:
 
     # -- device chunk --------------------------------------------------------
 
+    def _prefill_wrap(self, params, cache, tokens, length):
+        """Prefill, shard_map-wrapped when serving tensor-parallel.
+
+        Inside the shard_map every device prefills with its local weight /
+        KV-head shard (one psum per block); tokens, length and logits are
+        replicated. ``length`` may be None (exact-length prompts) — an
+        empty pytree, which shard_map broadcasts a spec over harmlessly.
+        """
+        if self.tp == 1:
+            return self.model.prefill(params, tokens, cache=cache,
+                                      length=length)
+        from repro.nn.sharding import shard_map_compat
+        mm = self._mm
+        fn = lambda p, c, t, l: mm.prefill(p, t, cache=c, length=l)
+        rep = P()
+        return shard_map_compat(
+            fn, self._mesh,
+            in_specs=(self._param_specs, self._small_specs, rep, rep),
+            out_specs=(self._small_specs, rep),
+        )(params, cache, tokens, length)
+
+    def _chunk_wrap(self, params, cache, tok, done, n_gen, keys, temps,
+                    topks, max_new, *, steps: int, eos: int, pad: int,
+                    greedy_only: bool, topk_any: bool):
+        """The scan-fused chunk, shard_map-wrapped when tensor-parallel.
+
+        The whole ``steps``-long decode scan runs inside ONE shard_map:
+        params and the slot cache stay resident as shards, the per-slot
+        token/done/pos/sampling state is replicated (every device runs the
+        identical sampler on identical psum'd logits), so the emitted
+        tokens are bit-identical to the tp=1 scan's by construction of the
+        replicated compute — the property tests/test_tp_engine.py pins.
+        """
+        impl = functools.partial(self._chunk_impl, steps=steps, eos=eos,
+                                 pad=pad, greedy_only=greedy_only,
+                                 topk_any=topk_any)
+        if self.tp == 1:
+            return impl(params, cache, tok, done, n_gen, keys, temps, topks,
+                        max_new)
+        from repro.nn.sharding import shard_map_compat
+        rep = P()
+        return shard_map_compat(
+            impl, self._mesh,
+            in_specs=(self._param_specs, self._cache_specs,
+                      rep, rep, rep, rep, rep, rep, rep),
+            out_specs=(self._cache_specs, rep, rep, rep, rep),
+        )(params, cache, tok, done, n_gen, keys, temps, topks, max_new)
+
     def _seed_kv_scales(self, small, slot: int):
         """Copy the target slot's static KV scale leaves into the batch-1
         prefill cache. Scales are calibration state (per-model constants,
@@ -363,7 +440,7 @@ class ServeEngine:
         the hot loop when every live slot has temperature 0 — argmax is
         exactly what sample_tokens returns there.
         """
-        model = self.model
+        model = self._mm    # the manual_tp twin when serving tensor-parallel
 
         def body(carry, _):
             cache, tok, done, n_gen = carry

@@ -42,6 +42,7 @@ from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
 from repro.core.policy import (QuantPolicy, add_kv_quant_arg, add_policy_arg,
                                format_spec, resolve_kv_spec, storage_report)
 from repro.launch.engine import Request, SamplingParams, ServeEngine
+from repro.launch.mesh import make_tp_mesh
 from repro.nn.models import (apply_policy, build_model,
                              kv_decode_bytes_per_token)
 
@@ -134,6 +135,13 @@ def main(argv=None) -> None:
                     help="round prompt lengths up to this multiple for "
                          "prefill (bounds recompilation; attention "
                          "families only)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices (1-D 'tp' mesh): shards "
+                         "attention heads / MLP hidden / experts and the KV "
+                         "cache's head axis over N devices; greedy outputs "
+                         "are token-identical to --tp 1 (DESIGN.md §9; CPU: "
+                         "set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--legacy", action="store_true",
                     help="one-shot fixed-batch greedy loop (no engine)")
     args = ap.parse_args(argv)
@@ -148,13 +156,17 @@ def main(argv=None) -> None:
         print("(encdec: quantized KV cache unsupported on the legacy "
               "one-shot path; serving with a bf16 cache)")
         kv_spec = None
-    model = build_model(cfg, rcfg, use_kernel=args.use_kernel,
+    if args.tp > 1 and (args.legacy or cfg.family == "encdec"):
+        ap.error("--tp needs the engine path (not --legacy / encdec)")
+    mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
+    model = build_model(cfg, rcfg, mesh=mesh, use_kernel=args.use_kernel,
                         kv_spec=kv_spec)
     params = model.init(jax.random.PRNGKey(0))
     params = apply_policy(params, policy)
     print(f"[{args.arch} quant={policy.to_string()} "
           f"kv={format_spec(kv_spec) if kv_spec else 'bf16'} "
-          f"kernel={'pallas' if args.use_kernel else 'xla-lut'}]")
+          f"kernel={'pallas' if args.use_kernel else 'xla-lut'}"
+          f"{f' tp={args.tp}' if args.tp > 1 else ''}]")
     print(storage_report(params, policy))
     ctx_len = args.prompt_len + args.gen
     kv_q = kv_decode_bytes_per_token(cfg, ctx_len, kv_spec)

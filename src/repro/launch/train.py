@@ -29,23 +29,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, RunConfig, smoke as smoke_cfg
 from repro.nn.models import LM, build_model
+from repro.nn.sharding import shard_map_compat
 from repro.optim import OptConfig, apply_updates, init_opt_state
 from repro.runtime.compression import compressed_grad_transform
 
 __all__ = ["make_train_state", "make_train_step", "opt_config_from_run"]
-
-
-def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
-    """jax.shard_map across jax versions: new API (axis_names/check_vma)
-    when available, else jax.experimental.shard_map (auto/check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs,
-                             axis_names=set(manual_axes), check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    auto = frozenset(a for a in mesh.axis_names if a not in manual_axes)
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               auto=auto, check_rep=False)
 
 
 def opt_config_from_run(rcfg: RunConfig) -> OptConfig:
@@ -161,11 +149,11 @@ def make_train_step(model: LM, mesh=None):
                 return loss, grads, (new_ef if use_ef else 0)
 
             ef_in = state.get("ef") if use_ef else None
-            loss, grads, new_ef = _shard_map(
+            loss, grads, new_ef = shard_map_compat(
                 per_pod, mesh,
                 (P(), P("pod"), P()),
                 (P(), P(), P()),
-                {"pod"},
+                manual_axes={"pod"},
             )(params, batch, ef_in)
         else:
             loss, grads = grads_plain(params, batch)

@@ -323,10 +323,16 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
     bit-identical under a lossy cache.
     """
     B, Sq, _ = x.shape
-    H, G, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    Dh = cfg.d_head
+    # Head counts come from the weight leaves, not the config: inside a
+    # manual-TP shard_map (DESIGN.md §9) each device holds H/tp q heads and
+    # G/tp kv-head groups, and every reshape below must follow the local
+    # shard. Outside TP the shapes equal the config's.
+    H = p["wq"].shape[-2]
+    G = p["wk"].shape[-2]
     R = H // G
     tp = ctx.axis_size("model")
-    mode = attn_tp_mode(H, G, tp)
+    mode = attn_tp_mode(cfg.n_heads, cfg.n_kv_heads, tp)
 
     q = matmul_param(x, p["wq"], use_kernel=use_kernel).reshape(B, Sq, G, R, Dh)
     if cfg.qk_norm:
@@ -444,5 +450,7 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
         y = flash_attention(q, k, v, causal=causal, q_chunk=rcfg.attn_q_chunk,
                             kv_chunk=rcfg.attn_kv_chunk, ctx=ctx, mode=mode)
     y = y.reshape(B, Sq, H * Dh).astype(x.dtype)
-    out = matmul_param(y, p["wo"], use_kernel=use_kernel)
+    # wo is row-sharded under manual TP (its contraction dim is the local
+    # H*Dh shard): this psum is the block's one attention collective.
+    out = ctx.psum(matmul_param(y, p["wo"], use_kernel=use_kernel))
     return out, new_kv

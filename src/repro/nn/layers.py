@@ -100,7 +100,9 @@ def mlp_forward(p: dict, x: jax.Array, act: str, ctx, use_kernel: bool = False) 
     else:
         h = fn(matmul_param(x, p["wi"], use_kernel=use_kernel))
     h = ctx.constrain(h, "batch", "seq_attn", "mlp")
-    return matmul_param(h, p["wo"], use_kernel=use_kernel)
+    # down-proj is row-sharded under manual TP (contraction over the local
+    # d_ff shard): the block's one MLP collective (DESIGN.md §9).
+    return ctx.psum(matmul_param(h, p["wo"], use_kernel=use_kernel))
 
 
 def dense_init(key, in_dim: int, out_dims, scale: Optional[float] = None,

@@ -370,15 +370,19 @@ class LM:
 
         Quantized caches add per-head-dim-channel scale leaves; codes keep
         the float leaves' kv_seq sharding (the flash-decode combine over a
-        sequence-sharded cache works on codes exactly as on floats).
+        sequence-sharded cache works on codes exactly as on floats). The
+        head axis is named "kv_heads_c": unmapped on production meshes
+        (kv_seq sharding wins there) but sharded by the serving TP mesh
+        (DESIGN.md §9), where codes AND their static scales split along the
+        same head axis as the attention weights.
         """
         cfg = self.cfg
         fam = cfg.family
-        kv = {"k": ("layers", "batch", None, "kv_seq", "head_dim"),
-              "v": ("layers", "batch", None, "kv_seq", "head_dim")}
+        kv = {"k": ("layers", "batch", "kv_heads_c", "kv_seq", "head_dim"),
+              "v": ("layers", "batch", "kv_heads_c", "kv_seq", "head_dim")}
         if self.kv_spec is not None:
-            kv["k_scale"] = ("layers", "batch", None, None, "head_dim")
-            kv["v_scale"] = ("layers", "batch", None, None, "head_dim")
+            kv["k_scale"] = ("layers", "batch", "kv_heads_c", None, "head_dim")
+            kv["v_scale"] = ("layers", "batch", "kv_heads_c", None, "head_dim")
         out: Dict[str, Any] = {"pos": ()}
         if fam == "dense":
             out["kv"] = kv
@@ -386,13 +390,13 @@ class LM:
             out["kv"] = {"moe": kv}
             if cfg.moe_every > 1:
                 dense_kv = {
-                    "k": ("layers", "layers2", "batch", None, "kv_seq", "head_dim"),
-                    "v": ("layers", "layers2", "batch", None, "kv_seq", "head_dim")}
+                    "k": ("layers", "layers2", "batch", "kv_heads_c", "kv_seq", "head_dim"),
+                    "v": ("layers", "layers2", "batch", "kv_heads_c", "kv_seq", "head_dim")}
                 if self.kv_spec is not None:
                     dense_kv["k_scale"] = ("layers", "layers2", "batch",
-                                           None, None, "head_dim")
+                                           "kv_heads_c", None, "head_dim")
                     dense_kv["v_scale"] = ("layers", "layers2", "batch",
-                                           None, None, "head_dim")
+                                           "kv_heads_c", None, "head_dim")
                 out["kv"]["dense"] = dense_kv
         elif fam == "encdec":
             out["kv"] = {"k": kv["k"], "v": kv["v"]}
@@ -440,6 +444,32 @@ class LM:
             lambda leaf, ax: self.ctx.sharding(ax, leaf.shape),
             abstract, logical,
             is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+    # -- serving tensor parallelism (DESIGN.md §9) ----------------------------
+
+    @property
+    def tp_size(self) -> int:
+        """Devices on the serving TP mesh (1 = single-device serving)."""
+        return self.ctx.axis_size("tp")
+
+    def manual_tp(self) -> "LM":
+        """Twin of this model for use INSIDE a shard_map over the TP mesh:
+        constrain no-ops, ``ctx.psum`` is live, and every weight/cache leaf
+        the twin sees is the local shard."""
+        from .sharding import manual_tp_ctx
+        return dataclasses.replace(self, ctx=manual_tp_ctx())
+
+    def param_tp_specs(self, params):
+        """PartitionSpec tree (QuantizedTensor-shaped at quantized leaves)
+        for the serving TP mesh; raises on indivisible/incongruent leaves."""
+        from .sharding import shard_policy_params
+        return shard_policy_params(params, self.logical(), self.ctx)
+
+    def cache_tp_specs(self, cache):
+        """PartitionSpec tree for a decode cache on the serving TP mesh
+        (head-sharded codes AND scales; everything else replicated)."""
+        from .sharding import logical_specs
+        return logical_specs(self.ctx, self.cache_logical(), cache)
 
     def prefill(self, params, tokens, *, cache, frames=None, length=None):
         """Run the full prompt, filling the cache. Returns (cache, last_logits).

@@ -85,25 +85,44 @@ def moe_forward(p: dict, x: jax.Array, cfg, ctx, use_kernel: bool = False) -> ja
         xt[token_of] * keep[:, None].astype(x.dtype))
     disp = disp[:-1].reshape(E, C, d)
     disp = ctx.constrain(disp, "experts", "expert_cap", None)
-    # 5. expert FFN (batched over E; EP-sharded)
+    # 5. expert FFN (batched over E; EP-sharded). Inside a manual-TP
+    # shard_map the weight leaves carry only E/tp local experts: routing
+    # and dispatch ran replicated over the GLOBAL expert ids above, so each
+    # device slices its expert rows out of the dispatch, computes its local
+    # FFNs, and scatters the results back into the global (E*C, d) layout —
+    # rows of non-local experts stay zero and the combine's psum below sums
+    # the disjoint per-device partials into the full mixture.
+    E_loc = p["wo"].shape[0]
+    if E_loc != E:
+        e0 = jax.lax.axis_index(ctx.tp_axis) * E_loc
+        disp_e = jax.lax.dynamic_slice_in_dim(disp, e0, E_loc, axis=0)
+    else:
+        disp_e = disp
     fn = activation(cfg.act)
     if is_gated(cfg.act):
-        g = jnp.einsum("ecd,edf->ecf", disp, param_value(p["wg"], x.dtype))
-        u = jnp.einsum("ecd,edf->ecf", disp, param_value(p["wu"], x.dtype))
+        g = jnp.einsum("ecd,edf->ecf", disp_e, param_value(p["wg"], x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", disp_e, param_value(p["wu"], x.dtype))
         h = fn(g) * u
     else:
-        h = fn(jnp.einsum("ecd,edf->ecf", disp, param_value(p["wi"], x.dtype)))
+        h = fn(jnp.einsum("ecd,edf->ecf", disp_e, param_value(p["wi"], x.dtype)))
     h = ctx.constrain(h, "experts", "expert_cap", None)
     out_e = jnp.einsum("ecf,efd->ecd", h, param_value(p["wo"], x.dtype))
     out_e = ctx.constrain(out_e, "experts", "expert_cap", None)
+    if E_loc != E:
+        out_e = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros((E, C, d), out_e.dtype), out_e, e0, axis=0)
     # 6. gather back + weighted combine
     out_flat = out_e.reshape(E * C, d)
     gathered = jnp.where(keep[:, None], out_flat[jnp.clip(slot, 0, E * C - 1)], 0.0)
     gates_sorted = gate_vals.reshape(-1)[order]
     contrib = gathered * gates_sorted[:, None].astype(x.dtype)
     y = jnp.zeros((T, d), x.dtype).at[token_of].add(contrib)
+    if E_loc != E:
+        y = ctx.psum(y)     # the MoE block's one expert-combine collective
     if cfg.n_shared_experts:
         from .layers import mlp_forward
+        # mlp_forward psums its own (tp-sharded) down-proj, so the shared
+        # contribution adds in AFTER the expert psum — full on every device.
         y = y + mlp_forward(p["shared"], xt[None], cfg.act, ctx,
                             use_kernel=use_kernel)[0]
     return y.reshape(B, S, d)

@@ -2,5 +2,58 @@ import os
 import sys
 
 # Tests run on the single real CPU device; the 512-device dry-run sets its
-# own XLA_FLAGS in a separate process (see launch/dryrun.py).
+# own XLA_FLAGS in a separate process (see launch/dryrun.py), and the
+# tensor-parallel suite (test_tp_engine.py) runs under the CI multi-device
+# job's XLA_FLAGS=--xla_force_host_platform_device_count=4.
 sys.path.insert(0, os.path.dirname(__file__))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny():
+    """Session-cached tiny-model factory shared by every engine/model suite.
+
+    ``tiny(arch, **build_kw) -> (cfg, model, params)`` builds the smoke
+    reduction of an assigned arch; parameters are initialized ONCE per
+    (arch, overrides) and shared across tests — engines donate their cache,
+    never their params, and quantization (apply_policy) copies, so sharing
+    is safe and saves the repeated per-module init the old per-file
+    fixtures paid.
+
+    * ``drop_free=True``: MoE capacity_factor=100 (forward/decode/microbatch
+      comparisons must not differ by which tokens an expert dropped).
+    * ``cfg_overrides``: dataclasses.replace overrides on the smoke config
+      (e.g. the TP suite's MHA dense variant, ``n_kv_heads=4``).
+    * ``rcfg``: RunConfig override (default ``RunConfig(remat="none")``).
+    * remaining ``build_kw`` goes to ``build_model`` (mesh/use_kernel/
+      kv_spec/kv_kernel) — models are cheap facades, built per call.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import ARCHS, RunConfig, smoke
+    from repro.nn.models import build_model
+
+    cfgs, params_cache = {}, {}
+
+    def get(arch, *, drop_free=False, cfg_overrides=None, rcfg=None,
+            **build_kw):
+        over = tuple(sorted((cfg_overrides or {}).items()))
+        ckey = (arch, drop_free, over)
+        if ckey not in cfgs:
+            cfg = smoke(ARCHS[arch])
+            if drop_free and cfg.family == "moe":
+                cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+            if cfg_overrides:
+                cfg = dataclasses.replace(cfg, **cfg_overrides)
+            cfgs[ckey] = cfg
+        cfg = cfgs[ckey]
+        if ckey not in params_cache:
+            base = build_model(cfg, RunConfig(remat="none"))
+            params_cache[ckey] = base.init(jax.random.PRNGKey(0))
+        model = build_model(cfg, rcfg or RunConfig(remat="none"), **build_kw)
+        return cfg, model, params_cache[ckey]
+
+    return get

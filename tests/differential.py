@@ -1,0 +1,99 @@
+"""Shared differential (oracle-equality) harness for the serving engine.
+
+Three suites pin the same contract — an engine variant must reproduce a
+reference engine's token streams EXACTLY, request by request:
+
+  * kernel vs XLA fallback      (tests/test_engine.py, tests/test_kv_cache.py)
+  * quantized KV cache kernel   (tests/test_kv_cache.py)
+  * tensor parallel tp=N vs 1   (tests/test_tp_engine.py)
+
+PR 3 established the discipline for kernel-vs-fallback; this module is that
+discipline promoted to one helper so every suite reports mismatches the
+same way (first diverging request/step, both streams) instead of a bare
+dict compare.
+
+Also hosts the tiny request/engine builders the engine suites share (the
+``tiny`` model factory itself lives in tests/conftest.py as a fixture).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.launch.engine import Request, SamplingParams, ServeEngine
+
+__all__ = ["make_prompt", "make_request", "make_engine", "engine_tokens",
+           "assert_token_identical", "differential_engines"]
+
+
+def make_prompt(i: int, n: int = 8, vocab: int = 512) -> np.ndarray:
+    """Deterministic per-request prompt (seeded by the request id)."""
+    return np.random.RandomState(i).randint(0, vocab, n)
+
+
+def make_request(i: int, vocab: int, max_new: int = 5, temp: float = 0.0,
+                 top_k: int = 0, arrival: float = 0.0, n: int = 8) -> Request:
+    return Request(rid=i, prompt=make_prompt(i, n, vocab), max_new=max_new,
+                   sampling=SamplingParams(temperature=temp, top_k=top_k),
+                   arrival=arrival)
+
+
+def make_engine(model, params, **kw) -> ServeEngine:
+    """Engine with the suites' shared small defaults (override per test)."""
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk", 3)
+    kw.setdefault("seed", 0)
+    return ServeEngine(model, params, **kw)
+
+
+def engine_tokens(model, params, requests: Sequence[Request],
+                  **engine_kw) -> Dict[int, List[int]]:
+    """Serve a workload to completion; returns {rid: generated tokens}."""
+    eng = make_engine(model, params, **engine_kw)
+    return {s.req.rid: s.out for s in eng.run(list(requests))}
+
+
+def assert_token_identical(got: Dict[int, List[int]],
+                           oracle: Dict[int, List[int]],
+                           label: str = "variant",
+                           oracle_label: str = "oracle") -> None:
+    """Token-identity assertion with a first-divergence diagnostic."""
+    assert sorted(got) == sorted(oracle), (
+        f"{label} served rids {sorted(got)} but {oracle_label} served "
+        f"{sorted(oracle)}")
+    for rid in sorted(oracle):
+        a, b = got[rid], oracle[rid]
+        if a == b:
+            continue
+        step = next((s for s, (x, y) in enumerate(zip(a, b)) if x != y),
+                    min(len(a), len(b)))
+        raise AssertionError(
+            f"{label} diverges from {oracle_label} on rid {rid} at token "
+            f"{step}:\n  {label:>12}: {a}\n  {oracle_label:>12}: {b}")
+
+
+def differential_engines(oracle: Callable[[], ServeEngine],
+                         variants: Dict[str, Callable[[], ServeEngine]],
+                         requests: Callable[[], List[Request]],
+                         drive: Optional[Callable] = None) -> None:
+    """Run the same workload through an oracle engine and each variant
+    engine; every variant's token streams must be identical to the
+    oracle's.
+
+    ``drive(engine, requests)`` customizes how a workload is served (e.g.
+    injecting an eviction mid-flight); the default is ``engine.run``.
+    Builders construct fresh engines so donated caches never leak between
+    runs, and ``requests()`` builds fresh Request lists (engines mutate
+    nothing in them, but symmetry keeps workloads obviously identical).
+    """
+    def serve(build) -> Dict[int, List[int]]:
+        eng = build()
+        if drive is None:
+            return {s.req.rid: s.out for s in eng.run(requests())}
+        return drive(eng, requests())
+
+    ref = serve(oracle)
+    for name, build in variants.items():
+        assert_token_identical(serve(build), ref, label=name)

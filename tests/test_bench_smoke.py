@@ -1,0 +1,40 @@
+"""Benchmark bit-rot guard: every entry registered in benchmarks.run must
+import and run in --smoke mode inside CI.
+
+Before this test, a bench that drifted out of sync with a refactor (an
+import, a renamed kwarg, a changed claim key) only failed at
+paper-figure-generation time. Each bench runs with the same kwargs
+``benchmarks.run --smoke`` would pass it, must return (rows, claims), and
+its claims must be printable scalars (the ``bench,claim,value`` contract
+EXPERIMENTS.md is generated from). CSV writes are redirected to a tmp dir
+via REPRO_BENCH_OUT so smoke-sized rows never clobber the committed
+experiments/bench artifacts.
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+from benchmarks.run import BENCHES
+
+
+@pytest.mark.parametrize("name,module", BENCHES, ids=[b[0] for b in BENCHES])
+def test_bench_runs_in_smoke_mode(name, module, tmp_path, monkeypatch):
+    # smoke rows must not clobber the committed experiments/bench CSVs
+    monkeypatch.setenv("REPRO_BENCH_OUT", str(tmp_path))
+    mod = __import__(module, fromlist=["run"])
+    sig = inspect.signature(mod.run).parameters
+    kwargs = {}
+    if "smoke" in sig:
+        kwargs["smoke"] = True
+    if "extra_specs" in sig:
+        kwargs["extra_specs"] = ()
+    rows, claims = mod.run(**kwargs)
+    assert isinstance(rows, list)
+    assert isinstance(claims, dict) and claims, f"{name}: no claims emitted"
+    for key, val in claims.items():
+        assert isinstance(key, str)
+        # the harness prints claims as CSV "bench,claim,value" lines
+        assert isinstance(val, (bool, int, float, str, np.bool_,
+                                np.integer, np.floating, dict)), (
+            f"{name}: claim {key!r} has unprintable type {type(val)}")

@@ -12,12 +12,16 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from differential import (assert_token_identical, differential_engines,
+                          make_engine, make_prompt as _prompt,
+                          make_request as _req)
+from proptest import Choice, Floats, given
 from repro.configs import ARCHS, RunConfig, smoke
 from repro.core.policy import (PRESETS, QuantPolicy, format_spec,
                                parse_kv_spec, resolve_kv_spec)
 from repro.core.quantizers import (QuantSpec, kv_code_dtype, kv_dequantize,
                                    kv_quantize, validate_kv_spec)
-from repro.launch.engine import Request, SamplingParams, ServeEngine
+from repro.launch.engine import ServeEngine
 from repro.nn.models import build_model, kv_decode_bytes_per_token
 
 FXP8 = QuantSpec(kind="fxp", M=8, F=7)
@@ -25,26 +29,14 @@ POFX8 = QuantSpec(kind="pofx", N=8, ES=2)
 
 
 @pytest.fixture(scope="module")
-def dense_parts():
-    cfg = smoke(ARCHS["yi-9b"])
-    rcfg = RunConfig(remat="none")
-    params = build_model(cfg, rcfg).init(jax.random.PRNGKey(0))
-    return cfg, rcfg, params
+def dense_parts(tiny):
+    cfg, model, params = tiny("yi-9b")
+    return cfg, model.rcfg, params
 
 
 def _model(cfg, rcfg, kv_spec=None, kv_kernel=None, use_kernel=False):
     return build_model(cfg, rcfg, use_kernel=use_kernel, kv_spec=kv_spec,
                        kv_kernel=kv_kernel)
-
-
-def _prompt(i, n=8, vocab=512):
-    return np.random.RandomState(i).randint(0, vocab, n)
-
-
-def _req(i, vocab, max_new=5, temp=0.0, top_k=0, arrival=0.0, n=8):
-    return Request(rid=i, prompt=_prompt(i, n, vocab), max_new=max_new,
-                   sampling=SamplingParams(temperature=temp, top_k=top_k),
-                   arrival=arrival)
 
 
 # ---------------------------------------------------------------------------
@@ -249,12 +241,7 @@ def test_quantized_cache_stays_near_unquantized(dense_parts):
 # ---------------------------------------------------------------------------
 
 
-def _engine(model, params, **kw):
-    kw.setdefault("n_slots", 2)
-    kw.setdefault("max_len", 48)
-    kw.setdefault("chunk", 3)
-    kw.setdefault("seed", 0)
-    return ServeEngine(model, params, **kw)
+_engine = make_engine
 
 
 @pytest.mark.parametrize("spec", [FXP8, POFX8])
@@ -281,7 +268,8 @@ def test_engine_evict_resume_bit_identity_quantized(dense_parts, spec):
         eng.admit_ready()
         eng.step()
     got = {rid: st.out for rid, st in eng._states.items()}
-    assert got == ref
+    assert_token_identical(got, ref, label="evict+resume",
+                           oracle_label="uninterrupted")
     assert eng._states[victim].n_evictions == 1
 
 
@@ -290,14 +278,13 @@ def test_engine_greedy_token_identical_kernel_vs_fallback(dense_parts):
     between the fused flash-decode kernel and the XLA
     quantize-on-write/dequantize-on-read fallback at the same spec."""
     cfg, rcfg, params = dense_parts
-    outs = {}
-    for kern in (False, True):
-        model = _model(cfg, rcfg, kv_spec=FXP8, kv_kernel=kern)
-        done = _engine(model, params).run(
-            [_req(i, cfg.vocab_size, max_new=6, arrival=float(i))
-             for i in range(3)])
-        outs[kern] = {s.req.rid: s.out for s in done}
-    assert outs[True] == outs[False]
+    fallback = _model(cfg, rcfg, kv_spec=FXP8, kv_kernel=False)
+    kernel = _model(cfg, rcfg, kv_spec=FXP8, kv_kernel=True)
+    differential_engines(
+        oracle=lambda: _engine(fallback, params),
+        variants={"flash-decode": lambda: _engine(kernel, params)},
+        requests=lambda: [_req(i, cfg.vocab_size, max_new=6,
+                               arrival=float(i)) for i in range(3)])
 
 
 def test_engine_preserves_calibrated_kv_scales(dense_parts):
@@ -337,12 +324,10 @@ def test_engine_chunk_and_slot_invariance_quantized(dense_parts):
 
 
 @pytest.mark.parametrize("arch", ["moonshot-v1-16b-a3b", "zamba2-1.2b"])
-def test_engine_other_families_quantized(arch):
+def test_engine_other_families_quantized(tiny, arch):
     """MoE (extra stacking dims) and hybrid (shared attention block) caches
     scatter/serve with code+scale leaves."""
-    cfg = smoke(ARCHS[arch])
-    model = _model(cfg, RunConfig(remat="none"), kv_spec=FXP8)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = tiny(arch, kv_spec=FXP8)
     done = ServeEngine(model, params, n_slots=2, max_len=24, chunk=3).run(
         [_req(i, cfg.vocab_size, max_new=4, arrival=float(2 * i))
          for i in range(3)])
@@ -351,13 +336,80 @@ def test_engine_other_families_quantized(arch):
         assert all(0 <= t < cfg.padded_vocab for t in s.out)
 
 
+# ---------------------------------------------------------------------------
+# Property tests (tests/proptest.py harness — the offline stand-in for
+# hypothesis): round-trip monotonicity of the cache code path and the
+# validate_kv_spec acceptance/rejection partition, beyond the example-based
+# cases above.
+# ---------------------------------------------------------------------------
+
+_KV_SPECS = [FXP8, QuantSpec(kind="fxp", M=8, F=4), POFX8,
+             QuantSpec(kind="pofx", N=6, ES=1),
+             QuantSpec(kind="pofx", N=8, ES=2, M=6)]
+
+
+@given(seed=3, examples=25,
+       x=Floats(lo=-4.0, hi=4.0, shape=(64,)),
+       spec=Choice(_KV_SPECS),
+       scale_exp=Choice([-2, 0, 1, 3]))
+def test_kv_roundtrip_monotone_and_bounded(x, spec, scale_exp):
+    """kv_dequantize(kv_quantize(x)) is monotone non-decreasing in x —
+    both the fxp grid and the posit lattice order codes like the reals —
+    saturates instead of wrapping outside the covered range, and is
+    deterministic (the bit the resume contract stands on)."""
+    scale = float(2.0 ** scale_exp)
+    xs = jnp.asarray(np.sort(x), jnp.float32)
+    codes = kv_quantize(xs, spec, scale)
+    again = kv_quantize(xs, spec, scale)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(again))
+    y = np.asarray(kv_dequantize(codes, spec, scale), np.float32)
+    assert np.all(np.diff(y) >= 0), (spec, y)
+    # saturation: the extreme inputs map to the extreme decoded values
+    assert y[0] == y.min() and y[-1] == y.max()
+    # within the exactly-covered range the error is grid-sized: one fxp
+    # step (2^-F) resp. the coarsest near-1 posit ulp, scaled
+    xin = np.asarray(xs)
+    inside = np.abs(xin) <= 0.75 * scale
+    if inside.any():
+        step = scale * (2.0 ** -(spec.F if spec.kind == "fxp" else
+                                 max(spec.N - 4, 2)))
+        assert np.max(np.abs(y[inside] - xin[inside])) <= step, spec
+
+
+@given(seed=4, examples=60,
+       kind=Choice(["fxp", "posit", "pofx", "bf16", "fp32"]),
+       N=Choice([4, 6, 8, 9, 12, 16]),
+       M=Choice([4, 6, 8, 9, 12, 16]),
+       rounding=Choice(["trunc", "nearest"]))
+def test_validate_kv_spec_partition(kind, N, M, rounding):
+    """validate_kv_spec accepts exactly: byte-wide fxp/pofx (pofx only with
+    trunc rounding); normalizes float kinds to None; rejects the rest with
+    the documented reasons."""
+    if kind in ("bf16", "fp32"):
+        assert validate_kv_spec(QuantSpec(kind=kind)) is None
+        return
+    spec = QuantSpec(kind=kind, N=N, ES=2, M=M, F=M - 1, rounding=rounding)
+    stored = spec.stored_bits
+    if kind == "posit":
+        with pytest.raises(ValueError, match="fxp or pofx"):
+            validate_kv_spec(spec)
+    elif stored > 8:
+        with pytest.raises(ValueError, match="byte-wide"):
+            validate_kv_spec(spec)
+    elif kind == "pofx" and rounding != "trunc":
+        with pytest.raises(ValueError, match="trunc"):
+            validate_kv_spec(spec)
+    else:
+        assert validate_kv_spec(spec) is spec
+
+
 def test_engine_kv_quant_with_weight_kernels_smoke(dense_parts):
     """Everything on: pofx weights through the Pallas matmul kernels AND
     the quantized cache through the flash-decode kernel."""
-    cfg, rcfg, _ = dense_parts
+    cfg, rcfg, params = dense_parts
     from repro.nn.models import apply_policy
     model = _model(cfg, rcfg, kv_spec=FXP8, use_kernel=True)
-    params = apply_policy(model.init(jax.random.PRNGKey(0)), "pofx8")
+    params = apply_policy(params, "pofx8")
     done = _engine(model, params, max_len=16).run(
         [_req(i, cfg.vocab_size, max_new=3, n=6) for i in range(2)])
     for s in done:

@@ -5,14 +5,12 @@ forward + one train step on CPU, assert output shapes and no NaNs. Also
 checks prefill/decode consistency against the full forward (the serving
 path is the paper's deployment mode).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, RunConfig, smoke
+from repro.configs import ARCHS, RunConfig
 from repro.launch.train import make_train_state, make_train_step
 from repro.nn.models import build_model, input_specs
 
@@ -30,22 +28,10 @@ def _batch(cfg, B=2, S=32, key=0):
 
 
 @pytest.fixture(scope="module")
-def built():
-    cache = {}
-
-    def get(name):
-        if name not in cache:
-            cfg = smoke(ARCHS[name])
-            if cfg.family == "moe":
-                # drop-free capacity: forward/decode/microbatch comparisons
-                # must not differ by which tokens an expert dropped
-                cfg = dataclasses.replace(cfg, capacity_factor=100.0)
-            model = build_model(cfg, RunConfig(remat="none"))
-            params = model.init(jax.random.PRNGKey(0))
-            cache[name] = (cfg, model, params)
-        return cache[name]
-
-    return get
+def built(tiny):
+    # drop-free capacity for MoE: forward/decode/microbatch comparisons
+    # must not differ by which tokens an expert dropped
+    return lambda name: tiny(name, drop_free=True)
 
 
 @pytest.mark.parametrize("name", ARCH_NAMES)

@@ -1,0 +1,272 @@
+"""Tensor-parallel serving engine differential tests (DESIGN.md §9).
+
+The contract: an engine over a 1-D ("tp",) mesh — attention heads / MLP
+hidden / experts and the KV cache's head axis sharded, one psum per block
+inside shard_map — serves token streams IDENTICAL to the single-device
+engine, greedy and sampled, with the Pallas kernels on and off, including
+an evict -> resume cycle under a lossy quantized KV cache.
+
+The in-process tests need >= 4 devices: CI runs them in the multi-device
+job (XLA_FLAGS=--xla_force_host_platform_device_count=4); on a single
+device they skip, and ``test_tp_subprocess_smoke`` still proves the tp=2
+differential end to end from the tier-1 suite by forcing fake devices in a
+child process.
+
+The differential configs pin ``activation_dtype="f32"``: splitting a
+contraction over devices reorders the floating-point accumulation, and at
+bf16 the per-matmul rounding makes TP numerically *variant* (a handful of
+activations per step land on the far side of a bf16 rounding boundary, and
+one flipped cache write compounds into occasional token flips). At f32 the
+reordering noise is ~1e-7 relative against O(1) logit gaps, so greedy
+argmax and the per-slot sample streams are stable — that is the precision
+at which token-identity is a meaningful hardware-independent contract.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from differential import (assert_token_identical, differential_engines,
+                          make_engine, make_request)
+
+
+def _fxp8():
+    from repro.core.quantizers import QuantSpec
+    return QuantSpec(kind="fxp", M=8, F=7)
+
+
+def _rcfg():
+    from repro.configs import RunConfig
+    return RunConfig(remat="none", activation_dtype="f32")
+
+
+@pytest.fixture(scope="module")
+def jax4():
+    import jax
+    if jax.device_count() < 4:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count"
+                    "=4 (CI multi-device job; tier-1 coverage comes from "
+                    "test_tp_subprocess_smoke)")
+    return jax
+
+
+# (arch, cfg_overrides): dense GQA, dense MHA (every stock dense smoke is
+# GQA with 2 kv groups, so tp=4 head sharding needs the MHA variant), MoE
+# with shared experts, and the zamba2 hybrid (replicated mamba blocks +
+# the one shared attention block sharded).
+ARCH_CASES = {
+    "dense": ("yi-9b", None),
+    "dense-mha": ("yi-9b", {"n_kv_heads": 4, "n_heads": 4}),
+    "moe": ("moonshot-v1-16b-a3b", None),
+    "hybrid": ("zamba2-1.2b", None),
+}
+
+
+def _build(tiny, name, tp, *, quant=None, **build_kw):
+    """(model, params) for one ARCH_CASES entry on a tp-device mesh."""
+    from repro.launch.mesh import make_tp_mesh
+    from repro.nn.models import apply_policy
+
+    arch, over = ARCH_CASES[name]
+    mesh = make_tp_mesh(tp) if tp > 1 else None
+    cfg, model, params = tiny(arch, cfg_overrides=over, rcfg=_rcfg(),
+                              mesh=mesh, **build_kw)
+    if quant is not None:
+        params = apply_policy(params, quant)
+    return cfg, model, params
+
+
+def _reqs(vocab, n=3, max_new=5, **kw):
+    return [make_request(i, vocab, max_new=max_new, arrival=float(i), **kw)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# The acceptance matrix: tp in {2, 4} x kernels on/off x dense + non-dense
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,tp,use_kernel", [
+    ("dense", 2, False),
+    ("dense", 2, True),
+    ("dense-mha", 4, False),
+    ("dense-mha", 4, True),
+    ("moe", 2, True),
+    ("moe", 4, False),
+    ("hybrid", 2, False),
+    ("hybrid", 4, True),
+])
+def test_tp_greedy_token_identical(jax4, tiny, name, tp, use_kernel):
+    """Greedy decode is token-identical between tp=1 and tp in {2, 4},
+    with the fused Pallas kernels on (pofx8-quantized weights, so the
+    matmul kernels actually engage) and off."""
+    quant = "pofx8" if use_kernel else None
+    cfg, model1, params = _build(tiny, name, 1, quant=quant,
+                                 use_kernel=use_kernel)
+    _, modelN, _ = _build(tiny, name, tp, quant=quant,
+                          use_kernel=use_kernel)
+    differential_engines(
+        oracle=lambda: make_engine(model1, params, max_len=32),
+        variants={f"tp={tp}": lambda: make_engine(modelN, params,
+                                                  max_len=32)},
+        requests=lambda: _reqs(cfg.vocab_size))
+
+
+def test_tp_sampled_streams_identical(jax4, tiny):
+    """Per-slot temperature/top-k sample streams survive TP: the sampler
+    runs replicated on psum'd logits, and slot keys fold absolute
+    positions on every device alike."""
+    cfg, model1, params = _build(tiny, "hybrid", 1)
+    _, model4, _ = _build(tiny, "hybrid", 4)
+    differential_engines(
+        oracle=lambda: make_engine(model1, params, max_len=32),
+        variants={"tp=4": lambda: make_engine(model4, params, max_len=32)},
+        requests=lambda: _reqs(cfg.vocab_size, max_new=6, temp=0.7,
+                               top_k=8))
+
+
+# ---------------------------------------------------------------------------
+# Evict -> resume under a lossy quantized cache, tensor-parallel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_kv_quant_evict_resume_bit_identity(jax4, tiny, tp):
+    """The PR 3 resume guarantee survives sharding: with fxp8 KV codes and
+    static scales split along the head axis, an evicted request re-prefills
+    to the identical code shards on every device, and the resumed stream
+    matches the UNINTERRUPTED single-device run bit for bit."""
+    name = "moe" if tp == 2 else "dense-mha"
+    cfg, model1, params = _build(tiny, name, 1, kv_spec=_fxp8())
+    _, modelN, _ = _build(tiny, name, tp, kv_spec=_fxp8())
+
+    def drive_with_eviction(eng, reqs):
+        for r in reqs:
+            eng.submit(r)
+        eng.admit_ready()
+        eng.step()
+        eng.evict(eng.active_rids[0])
+        while eng.pending_rids or eng.active_rids:
+            eng.admit_ready()
+            eng.step()
+        return {rid: st.out for rid, st in eng._states.items()}
+
+    reqs = lambda: _reqs(cfg.vocab_size, max_new=7, temp=0.7, top_k=8,
+                         n=3)
+    ref = {s.req.rid: s.out
+           for s in make_engine(model1, params).run(reqs())}
+    got = drive_with_eviction(make_engine(modelN, params), reqs())
+    assert_token_identical(got, ref, label=f"tp={tp}+evict",
+                           oracle_label="tp=1 uninterrupted")
+
+
+# ---------------------------------------------------------------------------
+# Sharding-validity guards (no mesh / few devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_tp_rejects_indivisible_heads(jax4, tiny):
+    """A GQA arch whose kv groups don't divide tp must fail loudly at
+    engine construction (silent replication would break the manual psum
+    contract), naming the offending leaf."""
+    with pytest.raises(ValueError, match="does not divide dim 'kv_heads'"):
+        _, model, params = _build(tiny, "dense", 4)   # smoke yi-9b: G=2
+        make_engine(model, params)
+
+
+def test_param_specs_shard_codes_and_scales(jax4, tiny):
+    """QuantizedTensor leaves shard codes AND scales consistently: the
+    attention head axis shards with a broadcast (size-1) scale dim, the
+    MLP hidden axis shards its per-channel scale alongside the codes."""
+    _, model, params = _build(tiny, "dense", 2, quant="pofx8")
+    specs = model.param_tp_specs(params)
+    wq = specs["blocks"]["attn"]["wq"]        # codes (L, d, H, Dh)
+    assert tuple(wq.codes) == (None, None, "tp", None)
+    assert all(a is None for a in tuple(wq.scale))
+    wg = specs["blocks"]["mlp"]["wg"]         # codes (L, d, ff)
+    assert tuple(wg.codes) == (None, None, "tp")
+    assert tuple(wg.scale) == (None, None, "tp")   # (L, 1, ff) per-channel
+    wo = specs["blocks"]["mlp"]["wo"]         # codes (L, ff, d): row shard
+    assert tuple(wo.codes) == (None, "tp", None)
+    assert all(a is None for a in tuple(wo.scale))
+
+
+def test_validate_scale_sharding_congruence():
+    """core.policy.validate_scale_sharding: broadcast scales replicate,
+    per-channel scales shard with their codes, incongruent layouts raise."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.policy import validate_scale_sharding
+
+    # per-tensor / broadcast scale over a sharded axis -> replicated
+    s = validate_scale_sharding("w", (64, 128), (1, 1), P(None, "tp"))
+    assert tuple(s) == (None, None)
+    # per-channel scale along the sharded axis -> shards with the codes
+    s = validate_scale_sharding("w", (64, 128), (1, 128), P(None, "tp"))
+    assert tuple(s) == (None, "tp")
+    # lower-rank scale aligns like numpy broadcasting (trailing dims)
+    s = validate_scale_sharding("w", (64, 128), (128,), P(None, "tp"))
+    assert tuple(s) == ("tp",)
+    # a scale varying along the sharded axis at a different granularity
+    # cannot be split consistently with its codes
+    with pytest.raises(ValueError, match="must match the sharded axis"):
+        validate_scale_sharding("w", (64, 128), (1, 32), P(None, "tp"))
+    with pytest.raises(ValueError, match="scale rank"):
+        validate_scale_sharding("w", (64,), (2, 64), P("tp"))
+
+
+def test_cache_specs_shard_head_axis(jax4, tiny):
+    """KV cache codes and static scales shard along the head axis; pos and
+    SSM state replicate (slot logic is device-count-agnostic)."""
+    _, model, _ = _build(tiny, "hybrid", 2, kv_spec=_fxp8())
+    cache = model.init_cache(2, 16)
+    import jax.numpy as jnp
+    cache["pos"] = jnp.zeros((2,), jnp.int32)
+    specs = model.cache_tp_specs(cache)
+    kv = specs["shared_kv"]
+    assert tuple(kv["k"]) == (None, None, "tp", None, None)
+    assert tuple(kv["k_scale"]) == (None, None, "tp", None, None)
+    assert all(a is None for a in tuple(specs["ssm"]["ssm"]))
+    assert tuple(specs["pos"]) in ((), (None,))
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 coverage on a single device: the tp=2 differential in a child
+# process with forced fake devices (the pattern test_sharding_dryrun uses)
+# ---------------------------------------------------------------------------
+
+
+def test_tp_subprocess_smoke():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.launch.engine import Request, SamplingParams, ServeEngine
+from repro.launch.mesh import make_tp_mesh
+from repro.nn.models import build_model
+
+cfg = smoke(ARCHS["yi-9b"])
+rcfg = RunConfig(remat="none", activation_dtype="f32")
+params = build_model(cfg, rcfg).init(jax.random.PRNGKey(0))
+def reqs():
+    return [Request(rid=i,
+                    prompt=np.random.RandomState(i).randint(0, cfg.vocab_size, 8),
+                    max_new=4, sampling=SamplingParams(), arrival=float(i))
+            for i in range(3)]
+outs = {}
+for tp in (1, 2):
+    mesh = make_tp_mesh(tp) if tp > 1 else None
+    eng = ServeEngine(build_model(cfg, rcfg, mesh=mesh), params,
+                      n_slots=2, max_len=24, chunk=3)
+    outs[tp] = {s.req.rid: s.out for s in eng.run(reqs())}
+assert outs[1] == outs[2], (outs[1], outs[2])
+print("OK tp-differential")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK tp-differential" in r.stdout
