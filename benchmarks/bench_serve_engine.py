@@ -20,6 +20,21 @@ plus a long-context mix for the quantized KV cache (DESIGN.md §8):
               up in the perf trajectory, and the kernel/fallback runs are
               checked token-identical under greedy sampling.
 
+plus the paged-cache mix (DESIGN.md §10):
+
+  sharedprefix — N requests drawn from K distinct system prompts, served
+              by the paged engine: every non-first request of a prompt
+              group should hit the radix prefix index and skip its system
+              prompt's prefill. Rows record prefill tokens skipped and KV
+              bytes per resident token (pool bytes over deduplicated
+              resident tokens); the bench's own expected hit count must
+              agree with ``ServeEngine.stats()``, and the paged streams
+              are checked token-identical to the dense engine's.
+
+``--smoke`` additionally emits the tp=2-vs-tp=1 decode tok/s row (the
+ROADMAP bench-trajectory item) by re-running the burst mix at both tp
+sizes in a child process with 2 fake CPU devices.
+
 Rows land in experiments/bench/serve_engine.csv. Run standalone
 (``python -m benchmarks.bench_serve_engine [--use-kernel]
 [--kv-quant fxp8]``) or via ``benchmarks.run``.
@@ -28,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import jax
 import numpy as np
@@ -156,6 +172,185 @@ def run_longctx(cfg, params, kv_spec, use_kernel: bool, sz: Sizes = FULL):
     return rows, claims
 
 
+def run_sharedprefix(cfg, params, kv_spec, use_kernel: bool, sz: Sizes,
+                     k_prompts: int = 2, page_size: int = 8):
+    """Shared-system-prompt mix through the paged engine (DESIGN.md §10).
+
+    N requests over K distinct system prompts (each 3/4 of the prompt
+    length, so it spans whole pages plus a partial tail — the CoW path);
+    the paged engine must skip the shared prefill, agree with the bench's
+    own expected hit count, and stay token-identical to the dense engine.
+    Returns (rows, claims).
+    """
+    rng = np.random.default_rng(11)
+    sys_len = max(page_size, 3 * sz.prompt // 4)
+    sys_prompts = [rng.integers(0, cfg.vocab_size, sys_len)
+                   for _ in range(k_prompts)]
+    prompts = []
+    for i in range(sz.n_req):
+        tail = rng.integers(0, cfg.vocab_size, max(1, sz.prompt - sys_len))
+        prompts.append(np.concatenate([sys_prompts[i % k_prompts], tail]))
+    # the last request repeats request 0's FULL prompt (an identical
+    # retry): its index hit caps at context-1, which lands mid-page, so
+    # the mix exercises the copy-on-write path too (asserted below);
+    # distinct-tail requests share only whole system-prefix pages (the
+    # radix index is page-granular on full pages)
+    prompts[-1] = prompts[0]
+
+    def reqs():
+        return [Request(rid=i, prompt=prompts[i], max_new=sz.gen,
+                        sampling=SamplingParams(),
+                        arrival=float(i * (sz.gen // 2)))
+                for i in range(sz.n_req)]
+
+    workload = reqs()
+    # f32 activations pin the dense-vs-paged identity assertion the same
+    # way DESIGN.md §9/§10 pin the TP and sharing differentials: a
+    # prefix-hit admission prefills only the suffix rows, and at bf16 the
+    # different reduction tiling can flip a boundary-straddling token
+    model = build_model(cfg, RunConfig(remat="none",
+                                       activation_dtype="f32"),
+                        use_kernel=use_kernel, kv_spec=kv_spec)
+    max_len = sz.prompt + sz.gen
+    dense = ServeEngine(model, params, n_slots=sz.slots, max_len=max_len,
+                        chunk=sz.chunk, seed=0)
+    ref = {s.req.rid: list(s.out) for s in dense.run([
+        dataclasses.replace(r) for r in workload])}
+    engine = ServeEngine(model, params, n_slots=sz.slots, max_len=max_len,
+                         chunk=sz.chunk, seed=0, paged=True,
+                         page_size=page_size)
+    done = engine.run(workload)
+    outs = {s.req.rid: list(s.out) for s in done}
+    if outs != ref:
+        raise AssertionError(
+            f"paged engine diverges from dense on the sharedprefix mix: "
+            f"{outs} vs {ref}")
+    st = engine.stats()
+    # admissions are serialized on the host, so every request after the
+    # first of its prompt group must hit the index (>= the page-aligned
+    # system prefix; CoW extends the hit into the shared partial page)
+    expected_hits = sz.n_req - k_prompts
+    if st["prefix_hits"] != expected_hits:
+        raise AssertionError(
+            f"prefix-cache hit count disagrees with the workload: engine "
+            f"reports {st['prefix_hits']}, bench expects {expected_hits} "
+            f"({sz.n_req} requests over {k_prompts} prompts)")
+    # bytes of pool HBM per deduplicated resident token: per-token K+V
+    # code bytes x page-internal fragmentation (allocated page slots over
+    # distinct resident tokens) — the capacity half of the paging win
+    per_tok = kv_decode_bytes_per_token(cfg, 1, kv_spec)["code_bytes"]
+    resident = max(st["index_resident_tokens"], 1)
+    row = {
+        "mix": "sharedprefix", "arch": ARCH, "quant": "(shared)",
+        "use_kernel": use_kernel, "slots": sz.slots,
+        "requests": sz.n_req, "prompt_len": sz.prompt, "gen": sz.gen,
+        "generated_tokens": st["generated_tokens"],
+        "decode_steps": st["decode_steps"],
+        "decode_tok_per_s": round(
+            st["decode_tokens"] / max(st["decode_time_s"], 1e-9), 2),
+        "prefill_s": round(st["prefill_time_s"], 4),
+        "decode_s": round(st["decode_time_s"], 4),
+        "kv_variant": f"paged-{page_size}",
+        "kv_spec": format_spec(kv_spec) if kv_spec else "bf16",
+        "prefill_tokens_skipped": st["prefix_hit_tokens"],
+        "prefix_hit_rate": round(st["prefix_hit_rate"], 3),
+        "resident_pages": st["resident_pages"],
+        "kv_bytes_per_resident_token": round(
+            per_tok * st["resident_pages"] * page_size / resident, 1),
+        "cow_copies": st["cow_copies"],
+    }
+    claims = {
+        "sharedprefix_prefill_tokens_skipped": int(st["prefix_hit_tokens"]),
+        "sharedprefix_hits_agree": True,
+        "sharedprefix_token_identical": True,
+    }
+    if st["prefix_hit_tokens"] <= 0:
+        raise AssertionError(
+            "sharedprefix mix skipped no prefill tokens: prefix sharing "
+            "is not engaging")
+    if st["cow_copies"] <= 0:
+        raise AssertionError(
+            "sharedprefix mix triggered no copy-on-write: the mis-aligned "
+            "system prefix should end mid-page on every hit")
+    return [row], claims
+
+
+_TP_SMOKE_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.launch.engine import Request, SamplingParams, ServeEngine
+from repro.launch.mesh import make_tp_mesh
+from repro.nn.models import build_model
+
+cfg = smoke(ARCHS["yi-9b"])
+rcfg = RunConfig(remat="none", activation_dtype="f32")
+params = build_model(cfg, rcfg).init(jax.random.PRNGKey(0))
+def reqs():
+    return [Request(rid=i,
+                    prompt=np.random.RandomState(i).randint(0, cfg.vocab_size, 8),
+                    max_new=6, sampling=SamplingParams())
+            for i in range(4)]
+for tp in (1, 2):
+    mesh = make_tp_mesh(tp) if tp > 1 else None
+    eng = ServeEngine(build_model(cfg, rcfg, mesh=mesh), params,
+                      n_slots=2, max_len=24, chunk=4)
+    eng.run(reqs())                       # warmup: compile outside timing
+    eng.prefill_time = eng.decode_time = 0.0
+    eng.decode_steps = 0
+    eng.clock = 0.0
+    warm = eng.stats()["generated_tokens"]
+    warm_sampled = eng.n_prefill_sampled
+    done = eng.run([Request(rid=100 + r.rid, prompt=r.prompt,
+                            max_new=r.max_new, sampling=r.sampling)
+                    for r in reqs()])
+    st = eng.stats()
+    n_dec = (st["generated_tokens"] - warm) - (eng.n_prefill_sampled
+                                               - warm_sampled)
+    print(f"TPROW,{tp},{n_dec / max(st['decode_time_s'], 1e-9):.2f}")
+"""
+
+
+def run_tp_smoke():
+    """tp=2 vs tp=1 decode tok/s (the ROADMAP bench-trajectory item).
+
+    Runs in a child process with 2 fake CPU devices so the row exists even
+    on single-device CI; on fake devices the ratio measures overhead, not
+    speedup — the row's value is the *trajectory* (it fails loudly when TP
+    serving bit-rots, and becomes a real comparison on multi-core
+    runners). Returns (rows, claims).
+    """
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", _TP_SMOKE_CODE],
+                       capture_output=True, text=True, cwd=root,
+                       timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"tp smoke subprocess failed:\n{r.stderr[-3000:]}")
+    rates = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("TPROW,"):
+            _, tp, rate = line.split(",")
+            rates[int(tp)] = float(rate)
+    if sorted(rates) != [1, 2]:
+        raise RuntimeError(f"tp smoke emitted {rates}, expected tp 1 and 2")
+    rows = [{
+        "mix": "tp-decode", "arch": ARCH, "quant": "none",
+        "use_kernel": False, "slots": 2, "requests": 4,
+        "prompt_len": 8, "gen": 6,
+        "kv_variant": f"tp={tp}",
+        "decode_tok_per_s": rate,
+    } for tp, rate in sorted(rates.items())]
+    claims = {
+        "tp2_vs_tp1_decode_ratio": round(rates[2] / max(rates[1], 1e-9), 3),
+    }
+    return rows, claims
+
+
 def run(use_kernel: bool = False, quant: str = "pofx8",
         kv_quant: str = "fxp8", smoke: bool = False):
     sz = SMOKE if smoke else FULL
@@ -212,6 +407,17 @@ def run(use_kernel: bool = False, quant: str = "pofx8",
                                          sz)
     rows += long_rows
     claims.update(long_claims)
+    write_csv("serve_engine", rows)
+    sp_rows, sp_claims = run_sharedprefix(cfg, params, kv_spec, use_kernel,
+                                          sz, page_size=2 if smoke else 8)
+    rows += sp_rows
+    claims.update(sp_claims)
+    if smoke:
+        # the ROADMAP bench-trajectory item: a tp=2-vs-tp=1 decode tok/s
+        # datapoint, emitted from --smoke so the CI bit-rot run carries it
+        tp_rows, tp_claims = run_tp_smoke()
+        rows += tp_rows
+        claims.update(tp_claims)
     write_csv("serve_engine", rows)
     return rows, claims
 

@@ -7,6 +7,9 @@ kv_flash_decode: fused quantized-KV-cache flash-decode attention (uint8/int8
                  code tiles stream from HBM, dequantize on the VPU in VMEM,
                  online-softmax against them — full-precision K/V never
                  round-trips through HBM)
+kv_flash_paged_decode: the same decode indirected through a per-slot block
+                 table over a flat page pool (scalar-prefetch indexing; the
+                 paged serving engine's hot path, DESIGN.md §10)
 ref:             pure-jnp oracles; every kernel is allclose-tested against them.
 
 Shared helpers (used by every matmul-shaped kernel in this package):
@@ -48,3 +51,4 @@ def vmem_scratch(shape, dtype=_jnp.float32):
 
 from .ops import fxp_matmul, pofx_decode, pofx_matmul, quant_matmul  # noqa: F401,E402
 from .kv_flash_decode import kv_flash_decode  # noqa: F401,E402
+from .kv_flash_paged_decode import kv_flash_paged_decode  # noqa: F401,E402

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from repro.core.pofx import pofx_normalized
 
 __all__ = ["pofx_decode_ref", "pofx_matmul_ref", "fxp_matmul_ref",
-           "decode_norm_to_fxp", "kv_flash_decode_ref"]
+           "decode_norm_to_fxp", "kv_flash_decode_ref",
+           "kv_flash_paged_decode_ref", "gather_pages"]
 
 
 def decode_norm_to_fxp(codes, N: int, ES: int, M: int):
@@ -65,6 +66,40 @@ def kv_flash_decode_ref(q, k_codes, k_scale, v_codes, v_scale, pos,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bgrs,bgsd->bgrd", p, v,
                       preferred_element_type=jnp.float32)
+
+
+def gather_pages(pool, tables) -> jax.Array:
+    """Materialize per-slot contiguous caches from a page pool.
+
+    pool: (n_pages, G, ps, Dh); tables: (B, max_pages) physical page ids
+    (garbage-page entries gather junk that per-slot ``pos`` masks).
+    Returns (B, G, max_pages * ps, Dh) — the heads-major layout
+    ``decode_attention`` expects. This is the XLA fallback's read path and
+    the indirection half of the paged kernel's oracle.
+    """
+    B, max_pages = tables.shape
+    _, G, ps, Dh = pool.shape
+    gathered = pool[tables]                       # (B, max_pages, G, ps, Dh)
+    return jnp.transpose(gathered, (0, 2, 1, 3, 4)).reshape(
+        B, G, max_pages * ps, Dh)
+
+
+def kv_flash_paged_decode_ref(q, k_pool, k_scale, v_pool, v_scale, tables,
+                              pos, spec) -> jax.Array:
+    """Oracle for the paged KV flash-decode kernel.
+
+    Gather every slot's pages into a contiguous cache, then run the dense
+    oracle. Pool scales are global per layer ((G, 1, Dh) — pages are
+    shareable across slots only because they quantize under one grid), so
+    they broadcast over the gathered batch axis.
+
+    q: (B, G, R, Dh); pools: (n_pages, G, ps, Dh); scales: (G, 1, Dh);
+    tables: (B, max_pages) int32; pos: scalar or (B,) valid lengths.
+    """
+    k = gather_pages(k_pool, tables)
+    v = gather_pages(v_pool, tables)
+    return kv_flash_decode_ref(q, k, k_scale[None], v, v_scale[None], pos,
+                               spec)
 
 
 def fxp_matmul_ref(a, b) -> jax.Array:

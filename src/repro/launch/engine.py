@@ -47,6 +47,20 @@ one-psum-per-block collectives). Tokens, slot keys, sampling params and
 ``pos`` stay replicated, so every scheduler decision below — admit, evict,
 resume, per-slot stopping — is device-count-agnostic and the served token
 streams are the single-device streams.
+
+**Paged mode** (``paged=True``, DESIGN.md §10): the per-slot dense cache is
+replaced by one flat pool of fixed-size token pages plus per-slot block
+tables; ``launch.paging.PagedKVManager`` owns allocation, refcounts and the
+radix prefix index on the host. Admission matches the context against the
+index and prefills only the unshared suffix (the shared prefix — system
+prompts, resumed generations — is already resident); eviction registers
+the sequence's pages in the index and drops its references, so resume
+re-attaches surviving pages and re-prefills exactly one token. The token
+streams stay identical to the dense engine's (the paged differential
+contract, tests/test_paged_cache.py): page contents are a deterministic
+function of the token prefix under the pool's global static scales, and
+the suffix prefill attends to [shared prefix ; suffix] with the same
+kv-chunk boundaries a dense full prefill would use.
 """
 from __future__ import annotations
 
@@ -136,7 +150,9 @@ class ServeEngine:
 
     def __init__(self, model, params, *, n_slots: int = 4, max_len: int = 512,
                  eos_id: Optional[int] = None, pad_id: int = 0,
-                 chunk: int = 8, prompt_bucket: int = 1, seed: int = 0):
+                 chunk: int = 8, prompt_bucket: int = 1, seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         if model.cfg.family == "encdec":
             raise NotImplementedError(
                 "encdec serving needs per-request encoder frames; use the "
@@ -154,6 +170,7 @@ class ServeEngine:
         self.pad_id = int(pad_id)
         self.chunk = int(chunk)
         self.prompt_bucket = max(1, int(prompt_bucket))
+        self.paged = bool(paged)
 
         # Tensor parallelism: a model built over the ("tp",) serving mesh
         # serves sharded. ``_mm`` is the model the jitted device functions
@@ -163,10 +180,40 @@ class ServeEngine:
         self._mm = model.manual_tp() if self.tp > 1 else model
         self._mesh = model.ctx.mesh if self.tp > 1 else None
 
-        self.cache = model.init_cache(n_slots, max_len)
-        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
-        self._cache_log_flat = jax.tree_util.tree_flatten(
-            model.cache_logical(), is_leaf=lambda x: isinstance(x, tuple))[0]
+        if self.paged:
+            # Paged KV cache (DESIGN.md §10): one flat page pool + per-slot
+            # block tables; the host-side manager owns allocation/refcounts
+            # and the radix prefix index. Default pool sizing matches the
+            # dense cache's capacity (every slot can hold max_len tokens)
+            # plus per-slot headroom for copy-on-write and index retention.
+            from repro.core.policy import format_spec
+            from .paging import PagedKVManager
+            self.page_size = int(page_size)
+            self.max_pages = -(-self.max_len // self.page_size)
+            if n_pages is None:
+                n_pages = n_slots * self.max_pages + n_slots + 1
+            self.n_pages = int(n_pages)
+            self.cache = model.init_paged_cache(
+                n_slots, max_len, n_pages=self.n_pages,
+                page_size=self.page_size)
+            kv = (self.cache["kv"]["moe"] if "moe" in self.cache["kv"]
+                  else self.cache["kv"])
+            # pages are shareable only between consumers of one cache
+            # format: the index keys on the spec string (or raw dtype)
+            spec_key = (format_spec(model.kv_spec) if model.kv_spec
+                        else f"raw:{kv['k'].dtype}")
+            self._pager = PagedKVManager(self.n_pages, self.page_size,
+                                         self.max_pages, spec_key)
+            self._slot_pos = np.zeros(n_slots, np.int64)
+            self._cache_log_flat = jax.tree_util.tree_flatten(
+                model.paged_cache_logical(),
+                is_leaf=lambda x: isinstance(x, tuple))[0]
+        else:
+            self.cache = model.init_cache(n_slots, max_len)
+            self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+            self._cache_log_flat = jax.tree_util.tree_flatten(
+                model.cache_logical(),
+                is_leaf=lambda x: isinstance(x, tuple))[0]
         n_leaves = len(jax.tree_util.tree_leaves(self.cache))
         if n_leaves != len(self._cache_log_flat):
             # scatter zips cache leaves against logical axes positionally;
@@ -180,8 +227,9 @@ class ServeEngine:
         if self.tp > 1:
             self._param_specs = model.param_tp_specs(params)
             self._cache_specs = model.cache_tp_specs(self.cache)
-            self._small_specs = model.cache_tp_specs(
-                jax.eval_shape(lambda: model.init_cache(1, self.max_len)))
+            if not self.paged:
+                self._small_specs = model.cache_tp_specs(
+                    jax.eval_shape(lambda: model.init_cache(1, self.max_len)))
             put = lambda tree, specs: jax.device_put(
                 tree, jax.tree.map(
                     lambda s: NamedSharding(self._mesh, s), specs))
@@ -213,8 +261,15 @@ class ServeEngine:
             static_argnames=("steps", "eos", "pad", "greedy_only",
                              "topk_any"),
             donate_argnums=(1,))
-        self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
-        self._prefill_fn = jax.jit(self._prefill_wrap, donate_argnums=(1,))
+        if self.paged:
+            self._prefill_paged_fn = jax.jit(
+                self._prefill_paged_wrap, static_argnames=("prefix_len",),
+                donate_argnums=(1,))
+            self._copy_page_fn = jax.jit(self._copy_page_impl,
+                                         donate_argnums=(0,))
+        else:
+            self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
+            self._prefill_fn = jax.jit(self._prefill_wrap, donate_argnums=(1,))
         self._sample_fn = jax.jit(sample_tokens)
 
     # -- scheduler (host) ----------------------------------------------------
@@ -256,12 +311,20 @@ class ServeEngine:
         st = self._states[rid]
         if st.slot < 0 or st.done:
             raise ValueError(f"request {rid} is not running")
-        self._slot_rid[st.slot] = -1
-        st.slot = -1
-        st.n_evictions += 1
         st.context = np.concatenate(
             [np.asarray(st.req.prompt, np.int32).reshape(-1),
              np.asarray(st.out, np.int32)])
+        if self.paged:
+            # register the sequence's pages in the prefix index, then drop
+            # its references: surviving pages make resume a one-token
+            # prefill (the index match re-attaches them), and a genuinely
+            # evicted (reclaimed) page just re-prefills like dense mode.
+            # Valid tokens = written KV positions = the slot's pos (the
+            # final sampled token was emitted but its KV never written).
+            self._release_slot_pages(rid, st)
+        self._slot_rid[st.slot] = -1
+        st.slot = -1
+        st.n_evictions += 1
         self._pending.appendleft(rid)
 
     def admit_ready(self) -> int:
@@ -288,7 +351,54 @@ class ServeEngine:
         room = self.max_len - int(np.asarray(st.req.prompt).size)
         return min(st.req.max_new, room)
 
+    def _admit_paged(self, rid: int, slot: int) -> None:
+        """Paged admission: match the prefix index, attach shared pages,
+        prefill only the unshared suffix through the page pool.
+
+        The host manager plans everything (borrowed pages, copy-on-write
+        of a mid-page boundary, fresh allocations); the device executes
+        the plan: CoW pool copies, the slot's block-table row, then a
+        batch-1 suffix prefill whose attention spans [shared prefix ;
+        suffix] — sampled logits match a dense full prefill's, so the
+        admission is stream-identical to the dense engine's.
+        """
+        st = self._states[rid]
+        ctx = st.context
+        P = int(ctx.size)
+        Pb = min(-(-P // self.prompt_bucket) * self.prompt_bucket,
+                 self.max_len)
+        t0 = time.perf_counter()
+        # prompt_bucket > 1 means the operator asked for bounded prefill
+        # compile variants — page-align the prefix hit too, since each
+        # distinct prefix_len is a fresh compile (exact-length serving,
+        # bucket 1, keeps token-granular sharing and recompiles per
+        # length, exactly like dense prefill does)
+        plan = self._pager.admit(rid, ctx.tolist(), Pb,
+                                 page_align=self.prompt_bucket > 1)
+        prefix_len = int(plan.prefix_len)
+        for src, dst in plan.copies:
+            self.cache = self._copy_page_fn(self.cache,
+                                            jnp.asarray(src, jnp.int32),
+                                            jnp.asarray(dst, jnp.int32))
+        self.cache["pages"] = self.cache["pages"].at[slot].set(
+            jnp.asarray(plan.table))
+        n_suffix = P - prefix_len
+        padded = np.full((1, Pb - prefix_len), self.pad_id, np.int32)
+        padded[0, :n_suffix] = ctx[prefix_len:]
+        self.cache, logits = self._prefill_paged_fn(
+            self.params, self.cache, jnp.asarray(padded),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(n_suffix, jnp.int32),
+            prefix_len=prefix_len)
+        # index the prompt's pages so concurrent/later requests with the
+        # same system prompt skip its prefill (content is final: writes
+        # past P only ever touch offsets beyond the registered valid run)
+        self._pager.register(rid, ctx.tolist(), P)
+        self._slot_pos[slot] = P
+        self._finish_admit(rid, slot, P, logits, t0)
+
     def _admit(self, rid: int, slot: int) -> None:
+        if self.paged:
+            return self._admit_paged(rid, slot)
         st = self._states[rid]
         ctx = st.context
         P = int(ctx.size)
@@ -306,14 +416,23 @@ class ServeEngine:
         length = None if Pb == P else jnp.asarray(P, jnp.int32)
         small, logits = self._prefill_fn(
             self.params, small, jnp.asarray(padded), length)
+        self.cache = self._scatter_fn(self.cache, small,
+                                      jnp.asarray(slot, jnp.int32))
+        self._finish_admit(rid, slot, P, logits, t0)
+
+    def _finish_admit(self, rid: int, slot: int, P: int, logits,
+                      t0: float) -> None:
+        """Shared admission tail: sample the first token from the prefill
+        logits (key folds the ABSOLUTE position P-1, so paged and dense
+        admissions draw the identical stream), publish slot state, retire
+        immediately on eos/length."""
+        st = self._states[rid]
         key = jax.random.fold_in(self._base_key, rid)
-        st0 = self._states[rid].req.sampling
+        st0 = st.req.sampling
         tok0 = self._sample_fn(
             logits, jax.random.fold_in(key, P - 1)[None],
             jnp.asarray([st0.temperature], jnp.float32),
             jnp.asarray([st0.top_k], jnp.int32))
-        self.cache = self._scatter_fn(self.cache, small,
-                                      jnp.asarray(slot, jnp.int32))
         tok0 = int(tok0[0])
         self._tok = self._tok.at[slot, 0].set(tok0)
         self._keys = self._keys.at[slot].set(key)
@@ -331,11 +450,27 @@ class ServeEngine:
         elif len(st.out) >= self._eff_max_new(st):
             self._finish(rid, "length")
 
+    def _release_slot_pages(self, rid: int, st: RequestState) -> None:
+        """Index the slot's pages (full pages + partial tail) for future
+        prefix hits, return the sequence's references to the allocator,
+        and point the slot's block-table row at the garbage page so the
+        retired slot's zombie decode writes (it still rides in the batch
+        until the next admission) cannot touch a live page."""
+        slot = st.slot
+        tokens = np.concatenate(
+            [np.asarray(st.req.prompt, np.int32).reshape(-1),
+             np.asarray(st.out, np.int32)])
+        self._pager.suspend(rid, tokens.tolist(), int(self._slot_pos[slot]))
+        self.cache["pages"] = self.cache["pages"].at[slot].set(
+            jnp.zeros((self.max_pages,), jnp.int32))
+
     def _finish(self, rid: int, reason: str) -> None:
         st = self._states[rid]
         st.finish_reason = reason
         st.finished_at = self.clock
         if st.slot >= 0:
+            if self.paged:
+                self._release_slot_pages(rid, st)
             self._slot_rid[st.slot] = -1
             st.slot = -1
         self._done_box.append(st)
@@ -362,6 +497,46 @@ class ServeEngine:
             in_specs=(self._param_specs, self._small_specs, rep, rep),
             out_specs=(self._small_specs, rep),
         )(params, cache, tokens, length)
+
+    def _prefill_paged_wrap(self, params, cache, tokens, slot, length, *,
+                            prefix_len: int):
+        """Paged suffix prefill, shard_map-wrapped when tensor-parallel:
+        the page pools ride in/out as head shards, the block tables / slot
+        / length / logits replicate. ``prefix_len`` is static (it fixes
+        gather sizes and the attention bias offset), so each distinct
+        shared-prefix length compiles once."""
+        if self.tp == 1:
+            return self.model.prefill_paged(params, tokens, cache=cache,
+                                            slot=slot, length=length,
+                                            prefix_len=prefix_len)
+        from repro.nn.sharding import shard_map_compat
+        mm = self._mm
+        fn = lambda p, c, t, s, l: mm.prefill_paged(
+            p, t, cache=c, slot=s, length=l, prefix_len=prefix_len)
+        rep = P()
+        return shard_map_compat(
+            fn, self._mesh,
+            in_specs=(self._param_specs, self._cache_specs, rep, rep, rep),
+            out_specs=(self._cache_specs, rep),
+        )(params, cache, tokens, slot, length)
+
+    def _copy_page_impl(self, cache, src, dst):
+        """Copy page ``src`` -> ``dst`` in every pool code leaf (the
+        device half of copy-on-write; scales are global per layer, nothing
+        to copy). The pool axis is found from the paged logical tree, so
+        moe's extra layer-stacking dims need no special-casing."""
+        flat, treedef = jax.tree_util.tree_flatten(cache)
+        out = []
+        for leaf, ax in zip(flat, self._cache_log_flat):
+            if "kv_pages" not in ax:
+                out.append(leaf)
+                continue
+            axis = ax.index("kv_pages")
+            page = jax.lax.dynamic_index_in_dim(leaf, src, axis,
+                                                keepdims=False)
+            out.append(jax.lax.dynamic_update_index_in_dim(
+                leaf, page, dst, axis))
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     def _chunk_wrap(self, params, cache, tok, done, n_gen, keys, temps,
                     topks, max_new, *, steps: int, eos: int, pad: int,
@@ -496,6 +671,19 @@ class ServeEngine:
         rem = int((max_new[live] - n_gen[live]).max())
         steps = min(steps, 1 << max(rem - 1, 0).bit_length())
 
+        if self.paged:
+            # allocate page coverage for every live slot's worst-case chunk
+            # advance BEFORE the scan runs device-side (allocation is host
+            # state; a mid-chunk page-boundary crossing cannot call out)
+            for b, rid in enumerate(self._slot_rid):
+                if rid < 0:
+                    continue
+                row = self._pager.ensure(
+                    rid, min(int(self._slot_pos[b]) + steps, self.max_len))
+                if row is not None:
+                    self.cache["pages"] = self.cache["pages"].at[b].set(
+                        jnp.asarray(row))
+
         t0 = time.perf_counter()
         self.cache, self._tok, _, _, toks = self._chunk_fn(
             self.params, self.cache, self._tok, jnp.asarray(~live),
@@ -518,6 +706,11 @@ class ServeEngine:
             for s in range(steps):
                 t = int(toks[s, b])
                 st.out.append(t)
+                if self.paged:
+                    # mirror the device: pos advances once per emitted
+                    # token (the final-token step advances, then freezes),
+                    # and must be current before _finish releases pages
+                    self._slot_pos[b] += 1
                 if self.eos_id is not None and t == self.eos_id:
                     self._finish(rid, "eos")
                     break
@@ -558,7 +751,7 @@ class ServeEngine:
         # one token per *admission* comes from prefill logits (so one per
         # request plus one per eviction/resume); the rest are decode steps
         n_dec = gen - self.n_prefill_sampled
-        return {
+        out = {
             "requests": len(self._states),
             "generated_tokens": gen,
             "prefill_sampled_tokens": self.n_prefill_sampled,
@@ -569,3 +762,8 @@ class ServeEngine:
             "decode_tok_per_s": n_dec / self.decode_time
             if self.decode_time else 0.0,
         }
+        if self.paged:
+            # prefix_hit_tokens = prefill tokens skipped via shared pages;
+            # resident_pages counts live pool pages (slots + index)
+            out.update(self._pager.stats())
+        return out

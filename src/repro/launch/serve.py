@@ -26,6 +26,16 @@ decode wall time, and the printed sample has exactly ``gen`` tokens.
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
         --temperature 0.8 --top-k 40 --arrival-gap 8 --requests 12
 
+``--paged --page-size N`` serves through the paged KV cache (DESIGN.md
+§10): a flat pool of N-token pages + per-slot block tables + a radix
+prefix index, so shared system prompts skip their prefill and eviction
+keeps pages resident (resume re-prefills one token). Token streams are
+identical to the dense engine's; the summary adds a paging-metrics line
+(prefix hit rate, resident pages, pages freed, CoW copies):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \\
+        --paged --page-size 16 --kv-quant fxp8 --use-kernel
+
 ``--legacy`` (automatic for encdec, which needs per-batch encoder frames)
 runs the old one-shot fixed-batch greedy loop instead.
 """
@@ -135,6 +145,16 @@ def main(argv=None) -> None:
                     help="round prompt lengths up to this multiple for "
                          "prefill (bounds recompilation; attention "
                          "families only)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (DESIGN.md §10): fixed-size token "
+                         "pages + per-slot block tables + radix prefix "
+                         "sharing; token streams identical to the dense "
+                         "engine (attention families dense/moe only)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page pool size (--paged; 0 = dense-equivalent "
+                         "capacity + headroom)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel devices (1-D 'tp' mesh): shards "
                          "attention heads / MLP hidden / experts and the KV "
@@ -158,6 +178,8 @@ def main(argv=None) -> None:
         kv_spec = None
     if args.tp > 1 and (args.legacy or cfg.family == "encdec"):
         ap.error("--tp needs the engine path (not --legacy / encdec)")
+    if args.paged and (args.legacy or cfg.family == "encdec"):
+        ap.error("--paged needs the engine path (not --legacy / encdec)")
     mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
     model = build_model(cfg, rcfg, mesh=mesh, use_kernel=args.use_kernel,
                         kv_spec=kv_spec)
@@ -200,10 +222,14 @@ def main(argv=None) -> None:
     n_req = args.requests or 2 * args.batch
     if n_req < 1 or G < 1 or P < 1:
         ap.error("--requests/--gen/--prompt-len must be >= 1")
+    if args.paged and cfg.family not in ("dense", "moe"):
+        ap.error(f"--paged supports dense/moe families, not {cfg.family}")
     engine = ServeEngine(
         model, params, n_slots=args.batch, max_len=P + G,
         eos_id=args.eos_id if args.eos_id >= 0 else None,
-        chunk=args.chunk, prompt_bucket=args.prompt_bucket, seed=0)
+        chunk=args.chunk, prompt_bucket=args.prompt_bucket, seed=0,
+        paged=args.paged, page_size=args.page_size,
+        n_pages=args.n_pages or None)
     rng = np.random.default_rng(1)
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     requests = [
@@ -227,6 +253,15 @@ def main(argv=None) -> None:
           f" tok/s)")
     print(f"total:   {n_gen} generated tokens in {engine.total_time:.3f}s "
           f"({n_gen/engine.total_time:.1f} tok/s end-to-end)")
+    if args.paged:
+        print(f"paging:  page={engine.page_size} tok, "
+              f"{stats['resident_pages']}/{engine.n_pages - 1} pages "
+              f"resident, prefix hits {stats['prefix_hits']}/"
+              f"{stats['prefix_queries']} "
+              f"(rate {stats['prefix_hit_rate']:.2f}, "
+              f"{stats['prefix_hit_tokens']} prefill tokens skipped), "
+              f"{stats['pages_freed']} pages freed on evict/finish, "
+              f"{stats['cow_copies']} CoW copies")
     s0 = done[0]
     if any(len(s.out) > G for s in done):  # must survive `python -O`
         raise RuntimeError("engine generated more than --gen tokens")

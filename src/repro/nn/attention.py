@@ -298,13 +298,70 @@ def decode_attention(q, k_cache, v_cache, pos, ctx, mode: str,
     return ctx.constrain(o.astype(q.dtype), *_q_logical(mode))
 
 
+def _pool_scale_grouped(scale: jax.Array) -> jax.Array:
+    """Paged pool scale (G, 1, Dh) -> (1, 1, G, Dh) for grouped K/V."""
+    return jnp.swapaxes(scale, 0, 1)[None]
+
+
+def _paged_write(pool: dict, tables: jax.Array, positions: jax.Array,
+                 k_vals: jax.Array, v_vals: jax.Array, page_size: int,
+                 kv_spec) -> dict:
+    """Scatter per-token K/V writes through a block table.
+
+    pool: {"k"/"v": (n_pages, G, ps, Dh)[, "k_scale"/"v_scale": (G,1,Dh)]};
+    tables: (max_pages,) one row or (B, max_pages); positions: (N,) token
+    indices aligned with k_vals/v_vals (N, G, Dh). Positions past the
+    table's coverage redirect to the garbage page (page 0): a retired
+    slot's zombie writes must not clobber a live page (the dense cache got
+    this isolation for free from per-slot rows).
+    """
+    ps = page_size
+    page_idx = positions // ps
+    off = positions % ps
+    row = tables if tables.ndim == 2 else jnp.broadcast_to(
+        tables[None], (positions.shape[0], tables.shape[0]))
+    max_pages = row.shape[1]
+    safe = jnp.minimum(page_idx, max_pages - 1)
+    pt = jnp.take_along_axis(row, safe[:, None], axis=1)[:, 0]
+    pt = jnp.where(page_idx < max_pages, pt, 0)
+    out = dict(pool)
+    for name, vals in (("k", k_vals), ("v", v_vals)):
+        dst = pool[name]
+        if kv_spec is not None and "k_scale" in pool:
+            vals = kv_quantize(jnp.swapaxes(vals[:, None], 1, 2),
+                               kv_spec, pool[f"{name}_scale"])[:, :, 0]
+        out[name] = dst.at[pt, :, off, :].set(vals.astype(dst.dtype))
+    return out
+
+
+def _paged_gather(pool: dict, tables: jax.Array, kv_spec):
+    """Pages -> contiguous heads-major K/V (the XLA fallback read path).
+
+    Returns (k, v) shaped (B, G, max_pages * ps, Dh), dequantized when the
+    pool holds codes. Same math as ``kernels.ref.gather_pages`` + dequant —
+    the oracle the paged kernel is tested against.
+    """
+    def one(name):
+        gathered = pool[name][tables]          # (B, max_pages, G, ps, Dh)
+        B, n, G, ps, Dh = gathered.shape
+        flat = jnp.transpose(gathered, (0, 2, 1, 3, 4)).reshape(
+            B, G, n * ps, Dh)
+        if kv_spec is not None and "k_scale" in pool:
+            return kv_dequantize(flat, kv_spec, pool[f"{name}_scale"][None])
+        return flat
+    return one("k"), one("v")
+
+
 def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
                  positions: jax.Array, causal: bool = True,
                  cache: Optional[dict] = None, cache_pos=None,
                  xa: Optional[jax.Array] = None,
                  use_kernel: bool = False,
                  kv_spec=None, kv_kernel: bool = False,
-                 kv_scales: Optional[dict] = None):
+                 kv_scales: Optional[dict] = None,
+                 pages: Optional[jax.Array] = None,
+                 page_size: Optional[int] = None,
+                 paged_prefill: Optional[dict] = None):
     """Full attention layer. Returns (y, new_cache_kv or None).
 
     cache: {"k": (B,G,S,Dh), "v": ...} for decode (self) or precomputed
@@ -321,6 +378,17 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
     so prefill sees exactly the values decode will read back — that
     equivalence is what makes the engine's evict -> re-prefill resume
     bit-identical under a lossy cache.
+
+    Paged cache (DESIGN.md §10): decode passes the *pool* layer as
+    ``cache`` ({"k"/"v": (n_pages, G, ps, Dh) pages, scales global
+    (G, 1, Dh)}) plus ``pages`` (the (B, max_pages) block tables) and the
+    static ``page_size`` — reads/writes indirect through the tables
+    (``kv_flash_paged_decode`` or the gather fallback). Prefill passes
+    ``paged_prefill`` = {pool, row, prefix_len, page_size}: the suffix
+    attends to the ``prefix_len`` tokens already resident in shared pages
+    (gathered + dequantized, ``bias_offset=prefix_len``) and its own K/V
+    writes land in the pool through the row — the prefix-sharing admission
+    path, batch-1 only.
     """
     B, Sq, _ = x.shape
     Dh = cfg.d_head
@@ -367,6 +435,34 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
             if cfg.qk_norm:
                 k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
             k = apply_rotary(k, cos, sin)
+            if pages is not None:
+                # paged decode (DESIGN.md §10): cache is the page POOL; the
+                # slot's tokens live wherever its block table points. Write
+                # the new token's codes through the table, then attend via
+                # the paged kernel (codes dequantize in VMEM per page) or
+                # the gather fallback (materialize + dequantize, the
+                # oracle's math).
+                pos_b = jnp.broadcast_to(jnp.reshape(cache_pos, (-1,)), (B,))
+                new_kv = _paged_write(cache, pages, pos_b, k[:, 0], v[:, 0],
+                                      page_size, kv_spec)
+                quant = kv_spec is not None and "k_scale" in cache
+                if quant and kv_kernel:
+                    from repro.kernels import kv_flash_paged_decode
+                    o = kv_flash_paged_decode(
+                        q[:, 0], new_kv["k"], cache["k_scale"], new_kv["v"],
+                        cache["v_scale"], pages, pos_b + 1, kv_spec)
+                    y = ctx.constrain(o[:, None].astype(q.dtype),
+                                      *_q_logical(mode))
+                else:
+                    kf, vf = _paged_gather(new_kv, pages, kv_spec)
+                    y = decode_attention(
+                        q, kf, vf, pos_b + 1, ctx, mode,
+                        bf16_compute=(not quant
+                                      and rcfg.serve_bf16_compute))
+                y = y.reshape(B, Sq, H * Dh).astype(x.dtype)
+                out = ctx.psum(matmul_param(y, p["wo"],
+                                            use_kernel=use_kernel))
+                return out, new_kv
             # heads-major cache (B, G, S, Dh): in-place update of one column.
             # cache_pos is a scalar (uniform batch) or a (B,) array of
             # per-slot write positions (continuous batching) — the array
@@ -427,7 +523,48 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
         if cfg.qk_norm:
             k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
         k = apply_rotary(k, cos, sin)
-        if kv_spec is not None and kv_scales is not None:
+        if paged_prefill is not None:
+            # Paged admission prefill (DESIGN.md §10, batch-1): the first
+            # ``prefix_len`` tokens of the context are already resident in
+            # shared pages — gather + dequantize them, attend the suffix
+            # against [prefix ; suffix] with ``bias_offset=prefix_len``
+            # (the same kv-chunk boundaries a full dense prefill of the
+            # whole context would use, so the suffix rows and the sampled
+            # logits match the dense engine's), and write only the
+            # suffix's codes through the block-table row.
+            if B != 1:
+                raise ValueError(
+                    f"paged prefill is batch-1 (admission), got B={B}")
+            pool = paged_prefill["pool"]
+            row = paged_prefill["row"]
+            prefix_len = int(paged_prefill["prefix_len"])
+            ps = int(paged_prefill["page_size"])
+            quant = kv_spec is not None and "k_scale" in pool
+            if quant:
+                ks = _pool_scale_grouped(pool["k_scale"])
+                vs = _pool_scale_grouped(pool["v_scale"])
+                k = kv_dequantize(kv_quantize(k, kv_spec, ks), kv_spec, ks,
+                                  k.dtype)
+                v = kv_dequantize(kv_quantize(v, kv_spec, vs), kv_spec, vs,
+                                  v.dtype)
+            new_kv = _paged_write(pool, row, prefix_len + jnp.arange(Sq),
+                                  k[0], v[0], ps, kv_spec)
+            if prefix_len > 0:
+                npp = -(-prefix_len // ps)
+                ids = jax.lax.slice_in_dim(row, 0, npp)
+
+                def grouped_prefix(name):
+                    t = pool[name][ids]            # (npp, G, ps, Dh)
+                    if quant:
+                        t = kv_dequantize(t, kv_spec,
+                                          pool[f"{name}_scale"], k.dtype)
+                    t = jnp.transpose(t, (0, 2, 1, 3)).reshape(
+                        npp * ps, G, Dh)
+                    return t[None, :prefix_len].astype(k.dtype)
+
+                k = jnp.concatenate([grouped_prefix("k"), k], axis=1)
+                v = jnp.concatenate([grouped_prefix("v"), v], axis=1)
+        elif kv_spec is not None and kv_scales is not None:
             # Quantized-cache prefill: round K/V through the cache grid
             # BEFORE attending, and hand the codes back for the cache
             # write. Prefill thereby attends to exactly what decode will
@@ -448,7 +585,9 @@ def attn_forward(p: dict, x: jax.Array, cfg, ctx, rcfg, *,
         k = ctx.constrain(k, *_kv_logical(mode))
         v = ctx.constrain(v, *_kv_logical(mode))
         y = flash_attention(q, k, v, causal=causal, q_chunk=rcfg.attn_q_chunk,
-                            kv_chunk=rcfg.attn_kv_chunk, ctx=ctx, mode=mode)
+                            kv_chunk=rcfg.attn_kv_chunk, ctx=ctx, mode=mode,
+                            bias_offset=(int(paged_prefill["prefix_len"])
+                                         if paged_prefill is not None else 0))
     y = y.reshape(B, Sq, H * Dh).astype(x.dtype)
     # wo is row-sharded under manual TP (its contraction dim is the local
     # H*Dh shard): this psum is the block's one attention collective.

@@ -411,6 +411,183 @@ class LM:
             out["shared_kv"] = kv
         return out
 
+    # -- paged decode cache (DESIGN.md §10) -----------------------------------
+
+    def _paged_pool(self, n_pages: int, page_size: int,
+                    spec: Optional[QuantSpec]):
+        # One layer's page pool: a flat (n_pages, G, ps, Dh) array of
+        # fixed-size token pages (heads-major within the page, so the
+        # decode einsums see the dense cache's layout after gather) plus —
+        # quantized — ONE static per-channel scale leaf per layer, global
+        # across pages: pages are shareable between requests only because
+        # every page quantizes under the same grid (paging.py).
+        cfg = self.cfg
+        G, Dh = cfg.n_kv_heads, cfg.d_head
+        if spec is not None:
+            cdt = kv_code_dtype(spec)
+            return {"k": jnp.zeros((n_pages, G, page_size, Dh), cdt),
+                    "k_scale": jnp.ones((G, 1, Dh), jnp.float32),
+                    "v": jnp.zeros((n_pages, G, page_size, Dh), cdt),
+                    "v_scale": jnp.ones((G, 1, Dh), jnp.float32)}
+        kdt = _dt(self.rcfg.kv_cache_dtype) \
+            if self.rcfg.kv_cache_dtype != "int8" else jnp.bfloat16
+        return {"k": jnp.zeros((n_pages, G, page_size, Dh), kdt),
+                "v": jnp.zeros((n_pages, G, page_size, Dh), kdt)}
+
+    def _require_pageable(self) -> None:
+        if self.cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged KV cache supports attention-only families "
+                f"(dense/moe), not {self.cfg.family!r}: SSM recurrent "
+                "state is O(1) per sequence (nothing to page) and cannot "
+                "be position-shared, and encdec serves on the legacy "
+                "one-shot path (DESIGN.md §10)")
+
+    def init_paged_cache(self, batch: int, max_len: int, *, n_pages: int,
+                         page_size: int) -> Dict[str, Any]:
+        """Paged decode cache: page pools + per-slot block tables.
+
+        Layout mirrors ``init_cache`` except the batch*seq cache axes are
+        replaced by one flat ``n_pages`` pool axis shared by every slot;
+        ``pages`` is the (batch, ceil(max_len/page_size)) block table of
+        physical page ids (garbage-page 0 when unallocated) the host-side
+        ``launch.paging.PagedKVManager`` maintains, and ``pos`` is the
+        dense engine's per-slot length vector unchanged.
+        """
+        self._require_pageable()
+        cfg = self.cfg
+        ps = int(page_size)
+        if ps < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        max_pages = -(-int(max_len) // ps)
+        spec = self.kv_spec
+
+        def stack(make, n):
+            return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[make() for _ in range(n)])
+        mk = lambda: self._paged_pool(n_pages, ps, spec)
+        cache: Dict[str, Any] = {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "pages": jnp.zeros((batch, max_pages), jnp.int32),
+        }
+        if cfg.family == "dense":
+            cache["kv"] = stack(mk, cfg.n_layers)
+        else:                                   # moe
+            ng = self.n_groups
+            cache["kv"] = {"moe": stack(mk, ng)}
+            if cfg.moe_every > 1:
+                cache["kv"]["dense"] = stack(
+                    lambda: stack(mk, cfg.moe_every - 1), ng)
+        return cache
+
+    def paged_cache_logical(self) -> Dict[str, Any]:
+        """Logical axes for the paged cache: the pool's head axis keeps the
+        dense cache's "kv_heads_c" name, so serving-TP sharding (DESIGN.md
+        §9) splits pages and their global scales along heads exactly as it
+        splits the dense cache; pool/page axes and the block tables
+        replicate (every device resolves the same page ids)."""
+        self._require_pageable()
+        cfg = self.cfg
+        kv = {"k": ("layers", "kv_pages", "kv_heads_c", "page_tok",
+                    "head_dim"),
+              "v": ("layers", "kv_pages", "kv_heads_c", "page_tok",
+                    "head_dim")}
+        if self.kv_spec is not None:
+            kv["k_scale"] = ("layers", "kv_heads_c", None, "head_dim")
+            kv["v_scale"] = ("layers", "kv_heads_c", None, "head_dim")
+        out: Dict[str, Any] = {"pos": (), "pages": ()}
+        if cfg.family == "dense":
+            out["kv"] = kv
+        else:
+            out["kv"] = {"moe": kv}
+            if cfg.moe_every > 1:
+                out["kv"]["dense"] = {
+                    name: (ax[0], "layers2") + ax[1:]
+                    for name, ax in kv.items()}
+        return out
+
+    def _paged_page_size(self, cache) -> int:
+        kv = cache["kv"]["moe"] if "moe" in cache["kv"] else cache["kv"]
+        return int(kv["k"].shape[-2])
+
+    def prefill_paged(self, params, tokens, *, cache, slot, length,
+                      prefix_len: int = 0):
+        """Admission prefill through the page pool (batch 1, one slot).
+
+        ``tokens`` (1, S) is the context *suffix* — the part not already
+        resident in shared pages — right-padded to a bucket when S exceeds
+        the true ``length`` (scalar, traced). ``prefix_len`` (static: it
+        sets gather sizes and the attention bias offset) counts the shared
+        resident tokens; the suffix attends to [prefix ; suffix] with the
+        kv-chunk boundaries a dense prefill of the whole context would
+        use, so the sampled logits match the dense engine's, and writes
+        its codes through slot's block-table row. Sets ``pos[slot]`` to
+        ``prefix_len + length``. Returns (cache, last-token logits).
+        """
+        self._require_pageable()
+        cfg, rcfg, ctx = self.cfg, self.rcfg, self.ctx
+        self._check_cache_layout(cache)
+        B, Sq = tokens.shape
+        positions = prefix_len + jnp.broadcast_to(jnp.arange(Sq)[None, :],
+                                                  (B, Sq))
+        x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
+        row = jnp.take(cache["pages"], slot, axis=0)
+        ps = self._paged_page_size(cache)
+        kv_spec = self.kv_spec
+        pp = lambda lc: dict(pool=lc, row=row, prefix_len=prefix_len,
+                             page_size=ps)
+        if cfg.family == "dense":
+            def body(h, lp, lc):
+                return T.dense_block_forward(lp, h, cfg, ctx, rcfg,
+                                             positions=positions,
+                                             use_kernel=self.use_kernel,
+                                             kv_spec=kv_spec,
+                                             paged_prefill=pp(lc))
+            x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                      cache=cache["kv"],
+                                      length=cfg.n_layers)
+        else:                                   # moe
+            def body(h, lp, lc):
+                new_c = dict(lc)
+                if "dense" in params["blocks"]:
+                    pools = []
+                    for i in range(cfg.moe_every - 1):
+                        dlp = jax.tree.map(lambda a: a[i], lp["dense"])
+                        dlc = jax.tree.map(lambda a: a[i], lc["dense"])
+                        h, pool = T.dense_block_forward(
+                            dlp, h, cfg, ctx, rcfg, positions=positions,
+                            use_kernel=self.use_kernel, kv_spec=kv_spec,
+                            paged_prefill=pp(dlc))
+                        pools.append(pool)
+                    new_c["dense"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *pools)
+                h, pool = T.moe_block_forward(lp["moe"], h, cfg, ctx, rcfg,
+                                              positions=positions,
+                                              use_kernel=self.use_kernel,
+                                              kv_spec=kv_spec,
+                                              paged_prefill=pp(lc["moe"]))
+                new_c["moe"] = pool
+                return h, new_c
+            blocks_cache = {"moe": cache["kv"]["moe"]}
+            if "dense" in cache["kv"]:
+                blocks_cache["dense"] = cache["kv"]["dense"]
+            x, new_kv = T.scan_blocks(body, x, params["blocks"], rcfg,
+                                      cache=blocks_cache,
+                                      length=self.n_groups)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        length = jnp.asarray(length, jnp.int32)
+        last = jnp.take_along_axis(
+            x, jnp.reshape(length - 1, (B, 1, 1)), axis=1)[:, 0]
+        w_un = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        if cfg.tie_embeddings:
+            logits = matmul_param(
+                last, jnp.swapaxes(param_value(w_un, x.dtype), 0, 1))
+        else:
+            logits = matmul_param(last, w_un, use_kernel=self.use_kernel)
+        cache = dict(cache, kv=new_kv,
+                     pos=cache["pos"].at[slot].set(prefix_len + length))
+        return cache, logits
+
     def _check_cache_layout(self, cache) -> None:
         # A cache allocated under a different kv_spec than the model's
         # (init_cache(kv_spec=...) is an allocation override only) would
@@ -467,9 +644,12 @@ class LM:
 
     def cache_tp_specs(self, cache):
         """PartitionSpec tree for a decode cache on the serving TP mesh
-        (head-sharded codes AND scales; everything else replicated)."""
+        (head-sharded codes AND scales; everything else replicated).
+        Detects the paged layout by its block-table leaf."""
         from .sharding import logical_specs
-        return logical_specs(self.ctx, self.cache_logical(), cache)
+        logical = (self.paged_cache_logical() if "pages" in cache
+                   else self.cache_logical())
+        return logical_specs(self.ctx, logical, cache)
 
     def prefill(self, params, tokens, *, cache, frames=None, length=None):
         """Run the full prompt, filling the cache. Returns (cache, last_logits).
@@ -655,6 +835,12 @@ class LM:
         x = T.embed_tokens(params["embed"], tokens, ctx, self.act_dtype)
         fam = cfg.family
         kv_kw = dict(kv_spec=self.kv_spec, kv_kernel=self.kv_use_kernel)
+        if "pages" in cache:
+            # paged decode (DESIGN.md §10): blocks read/write the page pool
+            # through the per-slot block tables instead of per-slot rows
+            self._require_pageable()
+            kv_kw.update(pages=cache["pages"],
+                         page_size=self._paged_page_size(cache))
         new_cache = dict(cache, pos=pos + 1)
         if fam == "dense":
             def body(h, lp, lc):

@@ -54,12 +54,15 @@ def dense_block_logical(cfg) -> dict:
 
 def dense_block_forward(p, x, cfg, ctx, rcfg, *, positions, cache=None,
                         cache_pos=None, causal=True, xa=None, use_kernel=False,
-                        kv_spec=None, kv_kernel=False, kv_scales=None):
+                        kv_spec=None, kv_kernel=False, kv_scales=None,
+                        pages=None, page_size=None, paged_prefill=None):
     h, new_kv = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
                              ctx, rcfg, positions=positions, causal=causal,
                              cache=cache, cache_pos=cache_pos, xa=xa,
                              use_kernel=use_kernel, kv_spec=kv_spec,
-                             kv_kernel=kv_kernel, kv_scales=kv_scales)
+                             kv_kernel=kv_kernel, kv_scales=kv_scales,
+                             pages=pages, page_size=page_size,
+                             paged_prefill=paged_prefill)
     x = x + h
     x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.act,
                         ctx, use_kernel=use_kernel)
@@ -83,12 +86,15 @@ def moe_block_logical(cfg) -> dict:
 
 def moe_block_forward(p, x, cfg, ctx, rcfg, *, positions, cache=None,
                       cache_pos=None, use_kernel=False,
-                      kv_spec=None, kv_kernel=False, kv_scales=None):
+                      kv_spec=None, kv_kernel=False, kv_scales=None,
+                      pages=None, page_size=None, paged_prefill=None):
     h, new_kv = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
                              ctx, rcfg, positions=positions, causal=True,
                              cache=cache, cache_pos=cache_pos,
                              use_kernel=use_kernel, kv_spec=kv_spec,
-                             kv_kernel=kv_kernel, kv_scales=kv_scales)
+                             kv_kernel=kv_kernel, kv_scales=kv_scales,
+                             pages=pages, page_size=page_size,
+                             paged_prefill=paged_prefill)
     x = x + h
     x = x + moe_forward(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, ctx,
                         use_kernel=use_kernel)

@@ -1,0 +1,574 @@
+"""Paged KV cache subsystem tests (DESIGN.md §10).
+
+Four layers of coverage:
+
+* block-manager invariants (``launch.paging``) via the tests/proptest.py
+  harness: alloc/free/refcount consistency (no double free, refcounts
+  recomputable from reachability), copy-on-write on mid-page prefix
+  boundaries, and the radix index never returning a page whose token
+  prefix or kv_spec mismatches the query;
+* the paged flash-decode kernel against its gather oracle
+  (``kernels.ref.kv_flash_paged_decode_ref``) over ragged block tables;
+* model level: ``prefill_paged`` / paged ``decode_step`` agree with the
+  dense cache path, including shared-prefix suffix prefill;
+* engine level — the acceptance contract: the paged engine's token
+  streams are IDENTICAL to the dense engine's (greedy AND sampled,
+  kernels on/off, tp in {1, 2}, evict -> resume under kv=fxp8), via the
+  shared tests/differential.py harness, plus prefix-cache hit-rate
+  accounting and pool-pressure reclaim.
+
+Sharing differentials pin f32 activations like the TP suite (DESIGN.md
+§9): token identity across reordered float accumulations is the contract
+at the precision where it is hardware-independent.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from differential import (assert_token_identical, differential_engines,
+                          make_engine, make_request as _req)
+from proptest import Choice, Ints, given
+from repro.core.quantizers import QuantSpec, kv_quantize
+from repro.launch.engine import ServeEngine
+from repro.launch.paging import (GARBAGE_PAGE, PageAllocator, PagedKVManager,
+                                 RadixPrefixIndex)
+
+FXP8 = QuantSpec(kind="fxp", M=8, F=7)
+POFX8 = QuantSpec(kind="pofx", N=8, ES=2)
+
+
+def _f32_rcfg():
+    from repro.configs import RunConfig
+    return RunConfig(remat="none", activation_dtype="f32")
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator / PagedKVManager invariants (proptest harness)
+# ---------------------------------------------------------------------------
+
+
+@given(seed=11, examples=30, ops=Ints(0, 2, shape=(40,)),
+       n_pages=Choice([4, 7, 16]))
+def test_allocator_no_double_free_and_partition(ops, n_pages):
+    """Random alloc/incref/decref traffic: refcounts never drift, freed
+    pages never stay referenced, double frees raise."""
+    alloc = PageAllocator(n_pages)
+    live = []
+    rng = np.random.default_rng(int(np.sum(ops)) + n_pages)
+    for op in np.asarray(ops).reshape(-1):
+        if op == 0 or not live:
+            pid = alloc.alloc()
+            if pid is None:
+                assert alloc.n_free == 0
+                continue
+            assert pid != GARBAGE_PAGE
+            live.append(pid)
+        elif op == 1:
+            pid = live[int(rng.integers(len(live)))]
+            alloc.incref(pid)
+            live.append(pid)
+        else:
+            pid = live.pop(int(rng.integers(len(live))))
+            alloc.decref(pid)
+        held = {p: live.count(p) for p in set(live)}
+        for p in range(1, n_pages):
+            assert alloc.refcount(p) == held.get(p, 0)
+        assert alloc.n_resident == len(set(live))
+    while live:
+        alloc.decref(live.pop())
+    assert alloc.n_free == n_pages - 1
+    with pytest.raises(ValueError, match="double free|unallocated"):
+        alloc.decref(1)
+
+
+@given(seed=12, examples=25, toks=Ints(0, 3, shape=(3, 24)),
+       ps=Choice([2, 4, 5]), n_req=Choice([2, 3]))
+def test_manager_lifecycle_refcounts_and_prefix_truth(toks, ps, n_req):
+    """Random admit/ensure/suspend/release traffic over a tiny token
+    alphabet (maximal prefix collisions): after every operation the
+    recomputed refcounts match (``check()``), and every admission's
+    matched prefix is literally a prefix of the submitted tokens."""
+    toks = np.asarray(toks)
+    max_pages = -(-toks.shape[1] // ps)
+    mgr = PagedKVManager(64, ps, max_pages, spec_key="fxp8")
+    rng = np.random.default_rng(int(toks.sum()))
+    admitted = {}
+    for rid in range(int(n_req)):
+        seq = [int(t) for t in toks[rid % toks.shape[0]]]
+        plan = mgr.admit(rid, seq, len(seq))
+        mgr.check()
+        assert 0 <= plan.prefix_len <= len(seq) - 1
+        # CoW exactly when the prefix ends mid-page; the copied page is
+        # fresh (refcount 1, owned by this sequence)
+        assert bool(plan.copies) == bool(plan.prefix_len % ps)
+        for src, dst in plan.copies:
+            assert mgr.alloc.refcount(dst) == 1 and dst != src
+        # matched pages must cover a literal prefix: pages registered for
+        # these tokens earlier — verify against the index's own key walk
+        re_pids, re_hit = mgr.index.match(seq, "fxp8")
+        assert re_hit >= plan.prefix_len
+        mgr.register(rid, seq, len(seq))
+        mgr.check()
+        admitted[rid] = seq
+    for rid, seq in admitted.items():
+        mgr.ensure(rid, min(len(seq) + int(rng.integers(0, 2 * ps)),
+                            max_pages * ps))
+        mgr.check()
+    for rid, seq in admitted.items():
+        if rng.random() < 0.5:
+            mgr.suspend(rid, seq, len(seq))
+        else:
+            mgr.release(rid)
+        mgr.check()
+    # a foreign kv_spec never matches
+    pids, hit = mgr.index.match(admitted[0], "pofx8es2")
+    assert pids == [] and hit == 0
+
+
+@given(seed=13, examples=30, toks=Ints(0, 2, shape=(4, 16)),
+       ps=Choice([2, 4]))
+def test_radix_index_never_returns_mismatched_prefix(toks, ps):
+    """Adversarial insert/match traffic: whatever the tree state, a match
+    must count only tokens that literally prefix the query, and every
+    returned page must have been inserted for exactly that token run."""
+    toks = np.asarray(toks)
+    alloc = PageAllocator(128)
+    idx = RadixPrefixIndex(alloc, ps, spec_key="s")
+    truth = {}                       # pid -> token run it was inserted for
+    for row in toks:
+        seq = [int(t) for t in row]
+        n_pages = -(-len(seq) // ps)
+        pids = [alloc.alloc() for _ in range(n_pages)]
+        idx.insert(seq, pids, len(seq))
+        for i, pid in enumerate(pids):
+            # the index adopts a pid only for NEW nodes (refcount 2 =
+            # caller + index); non-adopted pids free below and may be
+            # reallocated, so only adopted ones enter the shadow map
+            if alloc.refcount(pid) == 2:
+                truth[pid] = seq[i * ps:(i + 1) * ps]
+        for pid in pids:             # caller's own refs returned
+            alloc.decref(pid)
+    for row in toks[::-1]:
+        seq = [int(t) for t in row]
+        pids, hit = idx.match(seq, "s")
+        assert hit <= len(seq)
+        covered = 0
+        for i, pid in enumerate(pids):
+            want = seq[covered:min(covered + ps, hit)]
+            got = truth[pid][:len(want)]
+            assert got == want, (pid, got, want)
+            covered += len(want)
+        assert covered == hit
+        assert idx.match(seq, "OTHER") == ([], 0)
+
+
+def test_manager_admit_page_align_bounds_prefix():
+    """page_align=True rounds the hit down to a page boundary (no CoW, no
+    mid-page suffix start) — the engine couples it to prompt bucketing so
+    prefix_len, a static jit arg, has at most max_pages variants."""
+    ps = 4
+    mgr = PagedKVManager(32, ps, 8, spec_key="fxp8")
+    seq = list(range(30, 44))            # 14 tokens
+    mgr.admit(0, seq, 14)
+    mgr.register(0, seq, 14)
+    mgr.release(0)
+    aligned = mgr.admit(1, seq, 14, page_align=True)
+    assert aligned.prefix_len == 12 and not aligned.copies   # 13 -> 12
+    mgr.release(1)
+    exact = mgr.admit(2, seq, 14)        # capped at len - 1, mid-page
+    assert exact.prefix_len == 13 and exact.copies
+    mgr.release(2)
+    mgr.check()
+
+
+def test_paged_bucketed_prefill_identical(tiny):
+    """prompt_bucket > 1 (bounded compile variants) with prefix sharing:
+    page-aligned hits, streams still identical to the bucketed dense
+    engine."""
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8, rcfg=_f32_rcfg())
+    prompt = np.random.RandomState(9).randint(0, cfg.vocab_size, 11)
+
+    def reqs():
+        from repro.launch.engine import Request, SamplingParams
+        return [Request(rid=i, prompt=prompt, max_new=4,
+                        sampling=SamplingParams(), arrival=float(3 * i))
+                for i in range(2)]
+
+    ref = {s.req.rid: s.out for s in make_engine(
+        model, params, max_len=32, prompt_bucket=4).run(reqs())}
+    eng = make_engine(model, params, max_len=32, prompt_bucket=4,
+                      paged=True, page_size=4)
+    got = {s.req.rid: s.out for s in eng.run(reqs())}
+    assert_token_identical(got, ref, label="paged bucketed")
+    st = eng.stats()
+    assert st["prefix_hit_tokens"] == 8      # 10 usable -> aligned to 8
+    assert st["cow_copies"] == 0             # aligned: no mid-page start
+    eng._pager.check()
+
+
+def test_manager_pool_exhaustion_raises_and_reclaims():
+    ps, max_pages = 2, 4
+    mgr = PagedKVManager(6, ps, max_pages, spec_key="fxp8")  # 5 usable
+    a = list(range(10, 18))
+    mgr.admit(0, a, 8)               # 4 pages
+    mgr.register(0, a, 8)
+    mgr.check()
+    # pool nearly full: a second distinct admission must reclaim indexed
+    # pages once rid 0 releases, and raise while rid 0 still holds them
+    # (the failed admit rolls back cleanly — check() passes after it)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        mgr.admit(1, list(range(20, 28)), 8)
+    mgr.check()
+    mgr.release(0)                   # index still holds rid 0's pages
+    mgr.check()
+    plan = mgr.admit(2, list(range(20, 28)), 8)   # reclaim makes room
+    assert plan.prefix_len == 0
+    mgr.check()
+
+
+# ---------------------------------------------------------------------------
+# Paged kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [FXP8, POFX8])
+def test_paged_kernel_matches_oracle(spec):
+    from repro.kernels import kv_flash_paged_decode
+    from repro.kernels.ref import kv_flash_paged_decode_ref
+
+    rng = np.random.default_rng(0)
+    B, G, R, Dh, ps, n_pages, max_pages = 3, 2, 4, 16, 8, 10, 3
+    ks = jnp.asarray(np.exp2(rng.integers(0, 2, (G, 1, Dh))), jnp.float32)
+    vs = jnp.ones((G, 1, Dh), jnp.float32)
+    kc = kv_quantize(jnp.asarray(
+        rng.uniform(-0.9, 0.9, (n_pages, G, ps, Dh)), jnp.float32) * ks,
+        spec, ks)
+    vc = kv_quantize(jnp.asarray(
+        rng.uniform(-0.9, 0.9, (n_pages, G, ps, Dh)), jnp.float32), spec, vs)
+    q = jnp.asarray(rng.normal(size=(B, G, R, Dh)), jnp.float32)
+    tables = jnp.asarray(rng.integers(0, n_pages, (B, max_pages)), jnp.int32)
+    pos = jnp.asarray([5, 17, 24], jnp.int32)     # ragged, incl. full
+    out = kv_flash_paged_decode(q, kc, ks, vc, vs, tables, pos, spec)
+    ref = kv_flash_paged_decode_ref(q, kc, ks, vc, vs, tables, pos, spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_validates_layouts():
+    from repro.kernels import kv_flash_paged_decode
+
+    G, R, Dh, ps = 2, 2, 8, 4
+    q = jnp.zeros((1, G, R, Dh))
+    pool = jnp.zeros((4, G, ps, Dh), jnp.int8)
+    good = jnp.ones((G, 1, Dh), jnp.float32)
+    tables = jnp.zeros((1, 2), jnp.int32)
+    pos = jnp.asarray([3])
+    with pytest.raises(ValueError, match="global per-head-dim-channel"):
+        kv_flash_paged_decode(q, pool, jnp.ones((1, G, 1, Dh)), pool, good,
+                              tables, pos, FXP8)
+    with pytest.raises(ValueError, match="pool shape mismatch"):
+        kv_flash_paged_decode(q, pool, good, jnp.zeros((5, G, ps, Dh),
+                                                       jnp.int8),
+                              good, tables, pos, FXP8)
+    with pytest.raises(ValueError, match="tables must be"):
+        kv_flash_paged_decode(q, pool, good, pool, good,
+                              jnp.zeros((3,), jnp.int32), pos, FXP8)
+
+
+# ---------------------------------------------------------------------------
+# Model level: paged prefill/decode vs the dense cache path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,spec", [("yi-9b", None), ("yi-9b", FXP8),
+                                       ("moonshot-v1-16b-a3b", FXP8)])
+def test_prefill_paged_matches_dense_prefill(tiny, arch, spec):
+    """With an identity-ish block table, paged prefill produces the same
+    last-token logits as dense prefill (bit-exact: same flash chunking,
+    same fake-quant grid) and paged decode follows the dense tokens."""
+    cfg, model, params = tiny(arch, kv_spec=spec)
+    P, ps, max_len = 7, 4, 24
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (1, P)), jnp.int32)
+    dc = model.init_cache(1, max_len)
+    dc, dlg = model.prefill(params, toks, cache=dc)
+    pc = model.init_paged_cache(1, max_len, n_pages=16, page_size=ps)
+    mp = pc["pages"].shape[1]
+    pc["pages"] = pc["pages"].at[0].set(jnp.arange(1, mp + 1, dtype=jnp.int32))
+    pc, plg = model.prefill_paged(params, toks, cache=pc,
+                                  slot=jnp.asarray(0),
+                                  length=jnp.asarray(P), prefix_len=0)
+    np.testing.assert_array_equal(np.asarray(dlg), np.asarray(plg))
+    dc["pos"] = jnp.broadcast_to(dc["pos"], (1,))
+    tok = jnp.argmax(dlg, -1)[:, None]
+    for i in range(3):
+        dc, dlg = model.decode_step(params, dc, tok)
+        pc, plg = model.decode_step(params, pc, tok)
+        assert int(jnp.argmax(dlg)) == int(jnp.argmax(plg)), i
+        tok = jnp.argmax(dlg, -1)[:, None]
+
+
+def test_prefill_paged_shared_prefix_bit_identical(tiny):
+    """A suffix prefill against resident prefix pages yields the same
+    logits as prefilling the whole context — the prefix-sharing admission
+    invariant (same Skv, same kv-chunk boundaries, same codes)."""
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8)
+    P, ps, max_len = 7, 4, 24
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (1, P)), jnp.int32)
+    pc = model.init_paged_cache(2, max_len, n_pages=16, page_size=ps)
+    mp = pc["pages"].shape[1]
+    pc["pages"] = pc["pages"].at[0].set(jnp.arange(1, mp + 1, dtype=jnp.int32))
+    pc, full = model.prefill_paged(params, toks, cache=pc,
+                                   slot=jnp.asarray(0),
+                                   length=jnp.asarray(P), prefix_len=0)
+    row1 = np.zeros(mp, np.int32)
+    row1[0] = 1                                  # share slot 0's page 0
+    row1[1:] = np.arange(8, 8 + mp - 1)
+    pc["pages"] = pc["pages"].at[1].set(jnp.asarray(row1))
+    pc, shared = model.prefill_paged(params, toks[:, ps:], cache=pc,
+                                     slot=jnp.asarray(1),
+                                     length=jnp.asarray(P - ps),
+                                     prefix_len=ps)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(shared))
+
+
+def test_init_paged_cache_layout_and_rejections(tiny):
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8)
+    cache = model.init_paged_cache(2, 24, n_pages=9, page_size=4)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    assert cache["kv"]["k"].shape[1:] == (9, cfg.n_kv_heads, 4, cfg.d_head)
+    assert cache["kv"]["k_scale"].shape[1:] == (cfg.n_kv_heads, 1,
+                                                cfg.d_head)
+    assert cache["pages"].shape == (2, 6)
+    n = len(jax.tree_util.tree_leaves(cache))
+    log = jax.tree_util.tree_flatten(
+        model.paged_cache_logical(),
+        is_leaf=lambda x: isinstance(x, tuple))[0]
+    assert n == len(log)
+    for arch in ("falcon-mamba-7b", "zamba2-1.2b"):
+        _, m2, _ = tiny(arch)
+        with pytest.raises(ValueError, match="attention-only"):
+            m2.init_paged_cache(1, 16, n_pages=4, page_size=4)
+    _, m3, _ = tiny("yi-9b")
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(*tiny("zamba2-1.2b")[1:3], paged=True)
+
+
+# ---------------------------------------------------------------------------
+# Engine: the dense-vs-paged differential contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,use_kernel,temp", [
+    (None, False, 0.0),
+    (FXP8, False, 0.7),
+    (FXP8, True, 0.0),
+    (POFX8, True, 0.7),
+])
+def test_paged_engine_token_identical(tiny, spec, use_kernel, temp):
+    """The acceptance contract: greedy and sampled streams identical to
+    the dense engine, quantized KV kernels on and off."""
+    quant = "pofx8" if use_kernel else None
+    cfg, model, params = tiny("yi-9b", kv_spec=spec, use_kernel=use_kernel)
+    if quant:
+        from repro.nn.models import apply_policy
+        params = apply_policy(params, quant)
+    differential_engines(
+        oracle=lambda: make_engine(model, params),
+        variants={"paged": lambda: make_engine(model, params, paged=True,
+                                               page_size=8)},
+        requests=lambda: [_req(i, cfg.vocab_size, max_new=5, temp=temp,
+                               top_k=8 if temp else 0, arrival=float(i))
+                          for i in range(3)])
+
+
+def test_paged_engine_moe_token_identical(tiny):
+    cfg, model, params = tiny("moonshot-v1-16b-a3b", drop_free=True,
+                              kv_spec=FXP8)
+    differential_engines(
+        oracle=lambda: make_engine(model, params, max_len=32),
+        variants={"paged": lambda: make_engine(model, params, max_len=32,
+                                               paged=True, page_size=8)},
+        requests=lambda: [_req(i, cfg.vocab_size, max_new=4,
+                               arrival=float(i)) for i in range(3)])
+
+
+def test_paged_evict_resume_identical_and_reattaches(tiny):
+    """Evict -> resume under kv=fxp8: the resumed stream matches the
+    UNINTERRUPTED dense run, and resume re-attaches the evicted pages (a
+    one-token prefill: prefix_hit_tokens grows by the context length - 1)."""
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8)
+    mk = lambda: [_req(i, cfg.vocab_size, max_new=7, temp=0.7, top_k=8)
+                  for i in range(3)]
+    ref = {s.req.rid: s.out for s in make_engine(model, params).run(mk())}
+
+    eng = make_engine(model, params, paged=True, page_size=4)
+    for r in mk():
+        eng.submit(r)
+    eng.admit_ready()
+    eng.step()
+    victim = eng.active_rids[0]
+    before = eng.stats()["prefix_hit_tokens"]
+    eng.evict(victim)
+    while eng.pending_rids or eng.active_rids:
+        eng.admit_ready()
+        eng.step()
+    got = {rid: st.out for rid, st in eng._states.items()}
+    assert_token_identical(got, ref, label="paged evict+resume",
+                           oracle_label="dense uninterrupted")
+    assert eng._states[victim].n_evictions == 1
+    # resume matched everything the evicted slot had written
+    assert eng.stats()["prefix_hit_tokens"] > before
+    eng._pager.check()
+
+
+def test_paged_prefix_sharing_hits_and_identity(tiny):
+    """K requests sharing one system prompt: every admission after the
+    first hits the index, stats account the skipped prefill tokens
+    (context - 1 per full-duplicate admission), and streams still match
+    the dense engine. f32 activations pin the sharing differential the
+    way DESIGN.md §9 pins TP."""
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8, rcfg=_f32_rcfg())
+    prompt = np.random.RandomState(7).randint(0, cfg.vocab_size, 12)
+
+    def reqs():
+        from repro.launch.engine import Request, SamplingParams
+        return [Request(rid=i, prompt=prompt, max_new=4,
+                        sampling=SamplingParams(), arrival=float(3 * i))
+                for i in range(3)]
+
+    ref = {s.req.rid: s.out
+           for s in make_engine(model, params, max_len=32).run(reqs())}
+    eng = make_engine(model, params, max_len=32, paged=True, page_size=4)
+    got = {s.req.rid: s.out for s in eng.run(reqs())}
+    assert_token_identical(got, ref, label="paged shared-prefix")
+    st = eng.stats()
+    assert st["prefix_hits"] == 2
+    # identical context of 12 tokens -> each later admission skips 11
+    # (one token must prefill to produce logits)
+    assert st["prefix_hit_tokens"] == 2 * (len(prompt) - 1)
+    assert st["prefix_hit_rate"] == pytest.approx(2 / 3)
+    assert st["cow_copies"] >= 1          # 11 % 4 != 0: mid-page boundary
+    eng._pager.check()
+
+
+def test_paged_pool_pressure_reclaims_not_corrupts(tiny):
+    """A pool with zero headroom beyond the running slots: index holdings
+    must be reclaimed to admit new work, and the streams still match the
+    dense engine (a reclaimed prefix just re-prefills)."""
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8)
+    mk = lambda: [_req(i, cfg.vocab_size, max_new=4, arrival=float(2 * i))
+                  for i in range(4)]
+    ref = {s.req.rid: s.out
+           for s in make_engine(model, params, max_len=24).run(mk())}
+    # requests top out at 12 context tokens = 3 pages; 2 slots x 3 pages
+    # + garbage = the minimal pool, so any index retention from a finished
+    # request must be reclaimed before the next admission fits
+    eng = make_engine(model, params, max_len=24, paged=True, page_size=4,
+                      n_pages=7)
+    got = {s.req.rid: s.out for s in eng.run(mk())}
+    assert_token_identical(got, ref, label="paged under pool pressure")
+    assert eng._pager.pages_reclaimed > 0
+    eng._pager.check()
+
+
+def test_paged_stats_surface(tiny):
+    cfg, model, params = tiny("yi-9b", kv_spec=FXP8)
+    eng = make_engine(model, params, paged=True, page_size=8)
+    eng.run([_req(i, cfg.vocab_size, max_new=3) for i in range(2)])
+    st = eng.stats()
+    for key in ("prefix_hit_rate", "prefix_hit_tokens", "resident_pages",
+                "pages_freed", "cow_copies"):
+        assert key in st, key
+    dense = make_engine(model, params)
+    assert "prefix_hit_rate" not in dense.stats()
+
+
+# ---------------------------------------------------------------------------
+# Tensor parallel: tp=2 paged == tp=1 dense (in-process on the CI
+# multi-device job; subprocess smoke keeps tier-1 single-device coverage)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def jax4():
+    if jax.device_count() < 4:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count"
+                    "=4 (CI multi-device job; tier-1 coverage comes from "
+                    "test_paged_tp_subprocess_smoke)")
+    return jax
+
+
+def test_paged_tp_token_identical(jax4, tiny):
+    from repro.launch.mesh import make_tp_mesh
+
+    cfg, model1, params = tiny("yi-9b", rcfg=_f32_rcfg(), kv_spec=FXP8)
+    _, model2, _ = tiny("yi-9b", rcfg=_f32_rcfg(), kv_spec=FXP8,
+                        mesh=make_tp_mesh(2))
+    prompt = np.random.RandomState(7).randint(0, cfg.vocab_size, 12)
+
+    def reqs():
+        from repro.launch.engine import Request, SamplingParams
+        out = [_req(i, cfg.vocab_size, max_new=5, temp=0.7, top_k=8,
+                    arrival=float(i)) for i in range(2)]
+        out += [Request(rid=2 + i, prompt=prompt, max_new=4,
+                        sampling=SamplingParams(), arrival=float(2 + i))
+                for i in range(2)]
+        return out
+
+    differential_engines(
+        oracle=lambda: make_engine(model1, params, max_len=32),
+        variants={"paged tp=2": lambda: make_engine(
+            model2, params, max_len=32, paged=True, page_size=4)},
+        requests=reqs)
+
+
+def test_paged_tp_subprocess_smoke():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.configs import ARCHS, RunConfig, smoke
+from repro.core.quantizers import QuantSpec
+from repro.launch.engine import Request, SamplingParams, ServeEngine
+from repro.launch.mesh import make_tp_mesh
+from repro.nn.models import build_model
+
+cfg = smoke(ARCHS["yi-9b"])
+rcfg = RunConfig(remat="none", activation_dtype="f32")
+spec = QuantSpec(kind="fxp", M=8, F=7)
+params = build_model(cfg, rcfg).init(jax.random.PRNGKey(0))
+prompt = np.random.RandomState(7).randint(0, cfg.vocab_size, 10)
+def reqs():
+    out = [Request(rid=i,
+                   prompt=np.random.RandomState(i).randint(0, cfg.vocab_size, 8),
+                   max_new=4, sampling=SamplingParams(), arrival=float(i))
+           for i in range(2)]
+    out.append(Request(rid=2, prompt=prompt, max_new=3,
+                       sampling=SamplingParams(), arrival=2.0))
+    out.append(Request(rid=3, prompt=prompt, max_new=3,
+                       sampling=SamplingParams(), arrival=3.0))
+    return out
+dense = ServeEngine(build_model(cfg, rcfg, kv_spec=spec), params,
+                    n_slots=2, max_len=24, chunk=3)
+ref = {s.req.rid: s.out for s in dense.run(reqs())}
+paged = ServeEngine(build_model(cfg, rcfg, mesh=make_tp_mesh(2),
+                                kv_spec=spec), params,
+                    n_slots=2, max_len=24, chunk=3, paged=True, page_size=4)
+got = {s.req.rid: s.out for s in paged.run(reqs())}
+assert got == ref, (got, ref)
+assert paged.stats()["prefix_hit_tokens"] > 0
+print("OK paged-tp-differential")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK paged-tp-differential" in r.stdout
